@@ -1,0 +1,177 @@
+"""§Perf: hillclimb before/after tables from dry-run artifacts.
+
+Three hillclimbed cells (chosen per the task sheet):
+
+* **kimi-k2-1t-a32b × train_4k** — most collective-bound cell of the
+  baseline table.  Change: shard_map expert-parallel dispatch
+  (``REPRO_MOE_EP``); the 'before' record is regenerated under
+  ``REPRO_MOE_EP=0`` into ``artifacts/ablations/no_ep``.
+* **deepseek-67b × train_4k** — the remat-carry memory wall.  Change:
+  sequence-parallel residual stream (``REPRO_TRAIN_SP``); 'before' under
+  ``REPRO_TRAIN_SP=0`` in ``artifacts/ablations/no_sp``.
+* **deepseek-67b × prefill_32k** — most representative of the paper's
+  technique (pure GEMM+attention throughput, memory-dominated by the XLA
+  blocked-attention lowering).  Change: Pallas flash-attention kernel —
+  validated numerically in interpret mode (tests/test_kernels.py); its
+  HBM traffic is deterministic (q/k/v/o streamed once per pass), so the
+  'after' memory term substitutes the kernel's analytic traffic for the
+  measured ``attention_blocked``/``_where`` scopes
+  (:func:`flash_substituted`).
+
+``repro.launch.dryrun`` wrote every record; this module only reads.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.configs.base import get_config
+from repro.core.hardware import TPU_V5E
+from repro.launch.shapes import SHAPES
+
+ART = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+ABL = os.environ.get("REPRO_ABLATION_DIR", "artifacts/ablations")
+
+# scopes whose traffic the flash kernel eliminates (materialized scores,
+# softmax intermediates, masking selects)
+ATTN_SCOPES = ("attention_blocked", "_where", "flash_attention")
+
+
+def _load(path: str) -> Optional[dict]:
+    try:
+        return json.load(open(path))
+    except FileNotFoundError:
+        return None
+
+
+def cell(mesh: str, arch: str, shape: str, base: str = ART
+         ) -> Optional[dict]:
+    return _load(os.path.join(base, mesh, f"{arch}__{shape}.json"))
+
+
+def flash_attention_bytes(arch: str, shape_name: str, *,
+                          training: bool, tp: int = 16,
+                          batch_shards: int = 16) -> float:
+    """Analytic per-device HBM traffic of the Pallas flash kernel for
+    every attention layer of one step.
+
+    Per pass the kernel streams q, k, v once and writes o at storage
+    dtype (online-softmax state lives in VMEM scratch).  Training ~4
+    fwd-equivalent passes (fwd + remat recompute + bwd reading
+    q,k,v,o,dO and writing dq,dk,dv); inference 1.  Heads shard over the
+    16-way model axis when their projection dim divides; else they stay
+    replicated (smollm) — matching the layout engine's relaxation.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b_dev = max(shape.global_batch // batch_shards, 1)
+    s = shape.seq_len
+    dt = 2  # bf16
+
+    def shard(heads: int) -> float:
+        dim = heads * cfg.hd
+        return dim / tp if dim % tp == 0 else dim
+
+    q_bytes = b_dev * s * shard(cfg.n_heads) * dt
+    kv_bytes = 2 * b_dev * s * shard(cfg.n_kv_heads) * dt
+    per_layer = 2 * q_bytes + kv_bytes          # q + o + k + v
+    attn_layers = sum(
+        (cfg.repeats if i < len(cfg.layer_pattern) else 1)
+        for i, k in enumerate(cfg.layer_pattern + cfg.tail_pattern)
+        if k in ("attn", "local", "moe"))
+    passes = 4.0 if training else 1.0
+    return per_layer * attn_layers * passes
+
+
+def flash_substituted(rec: dict) -> dict:
+    """Memory term with the attention scopes' measured traffic replaced
+    by the flash kernel's analytic traffic."""
+    scopes = rec.get("bytes_by_scope", {})
+    attn_measured = sum(scopes.get(s, 0.0) for s in ATTN_SCOPES)
+    kernel = flash_attention_bytes(
+        rec["arch"], rec["shape"], training=(rec["kind"] == "train"))
+    total = rec["roofline"]["hbm_bytes_per_device"]
+    new_bytes = total - attn_measured + kernel
+    t_mem = new_bytes / TPU_V5E.hbm_bw
+    r = rec["roofline"]
+    t_bound = max(r["t_compute"], t_mem, r["t_collective"])
+    return {
+        "attn_scope_bytes": attn_measured,
+        "flash_kernel_bytes": kernel,
+        "hbm_bytes": new_bytes,
+        "t_memory": t_mem,
+        "roofline_fraction": r["t_compute"] / t_bound if t_bound else 0.0,
+        "dominant": max(
+            (("compute", r["t_compute"]), ("memory", t_mem),
+             ("collective", r["t_collective"])), key=lambda kv: kv[1])[0],
+    }
+
+
+def _fmt(rec: dict) -> str:
+    r = rec["roofline"]
+    mem = rec["memory_analysis"]["peak_bytes_per_device"] / 2 ** 30
+    return (f"peak={mem:.1f}GiB t=(c {r['t_compute']:.2f} / m "
+            f"{r['t_memory']:.2f} / x {r['t_collective']:.2f})s "
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}")
+
+
+def run(report) -> None:
+    # hillclimb A: EP dispatch
+    for arch in ("kimi-k2-1t-a32b", "qwen3-moe-235b-a22b"):
+        before = cell("single", arch, "train_4k", ABL + "/no_ep")
+        after = cell("single", arch, "train_4k")
+        if before and after and before.get("ok") and after.get("ok"):
+            rb, ra = before["roofline"], after["roofline"]
+            gain = rb["t_collective"] / max(ra["t_collective"], 1e-9)
+            report.row("perf", f"EP-dispatch {arch}/train_4k",
+                       before=_fmt(before), after=_fmt(after),
+                       coll_x=f"{gain:.1f}x", ok=gain > 2.0)
+    # hillclimb B: sequence parallelism
+    before = cell("single", "deepseek-67b", "train_4k", ABL + "/no_sp")
+    after = cell("single", "deepseek-67b", "train_4k")
+    if before and after and before.get("ok") and after.get("ok"):
+        mb = before["memory_analysis"]["peak_bytes_per_device"]
+        ma = after["memory_analysis"]["peak_bytes_per_device"]
+        report.row("perf", "seq-parallel deepseek-67b/train_4k",
+                   before=_fmt(before), after=_fmt(after),
+                   peak_x=f"{mb/ma:.1f}x", ok=mb / ma > 2.0)
+    # hillclimb C: flash-attention substitution on the prefill cell
+    rec = cell("single", "deepseek-67b", "prefill_32k")
+    if rec and rec.get("ok"):
+        sub = flash_substituted(rec)
+        r = rec["roofline"]
+        report.row(
+            "perf", "flash-kernel deepseek-67b/prefill_32k",
+            before=f"t_mem={r['t_memory']:.1f}s "
+                   f"frac={r['roofline_fraction']:.3f}",
+            after=f"t_mem={sub['t_memory']:.1f}s "
+                  f"frac={sub['roofline_fraction']:.3f} "
+                  f"dom={sub['dominant']}",
+            attn_bytes=f"{sub['attn_scope_bytes']:.2e}->"
+                       f"{sub['flash_kernel_bytes']:.2e}",
+            ok=sub["t_memory"] < 0.7 * r["t_memory"])
+
+
+def markdown() -> str:
+    """§Perf summary table for EXPERIMENTS.md."""
+    from benchmarks.run import Report
+    rep = Report()
+    run(rep)
+    lines = ["| iteration | before | after | gain | ok |",
+             "|---|---|---|---|---|"]
+    for r in rep.rows:
+        extra = [f"{k}={v}" for k, v in r.items()
+                 if k not in ("bench", "name", "ok", "before", "after")]
+        lines.append(f"| {r['name']} | {r.get('before','')} | "
+                     f"{r.get('after','')} | {' '.join(extra)} | "
+                     f"{'yes' if r['ok'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    from benchmarks.run import Report
+    rep = Report()
+    run(rep)
+    rep.print()

@@ -1,0 +1,134 @@
+"""§Roofline report: the 40-cell (arch × shape) table from dry-run
+artifacts.
+
+Reads ``artifacts/dryrun/single/*.json`` (written by
+``repro.launch.dryrun``) and emits, per cell: the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and memory fit — the
+exact §Roofline record the task sheet requires.  ``markdown_table()`` is
+what EXPERIMENTS.md embeds.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.base import ARCH_IDS
+from repro.launch.shapes import SHAPES
+
+ART_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load(mesh: str = "single") -> Dict[str, dict]:
+    out = {}
+    for path in glob.glob(os.path.join(ART_DIR, mesh, "*.json")):
+        rec = json.load(open(path))
+        out[f"{rec['arch']}__{rec['shape']}"] = rec
+    return out
+
+
+def _fmt_t(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def cell_rows(mesh: str = "single") -> List[dict]:
+    recs = load(mesh)
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            rec = recs.get(f"{arch}__{shape}")
+            if rec is None:
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "missing"})
+                continue
+            if rec.get("skipped"):
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "skip",
+                             "reason": rec["skip_reason"]})
+                continue
+            if not rec.get("ok"):
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "FAIL",
+                             "reason": rec.get("error", "?")[:200]})
+                continue
+            r = rec["roofline"]
+            mem = rec.get("memory_analysis", {})
+            peak = mem.get("peak_bytes_per_device")
+            hbm = rec.get("hbm_per_device", 16 * 2**30)
+            rows.append({
+                "arch": arch, "shape": shape, "status": "ok",
+                "t_compute": r["t_compute"], "t_memory": r["t_memory"],
+                "t_collective": r["t_collective"],
+                "dominant": r["dominant"],
+                "roofline_fraction": r["roofline_fraction"],
+                "useful_ratio": r["useful_flops_ratio"],
+                "peak_bytes": peak,
+                "fits": (peak is not None and peak <= hbm),
+                "layout": rec.get("layout"),
+            })
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | "
+        "bottleneck | roofline frac | 6ND/HLO | HBM/dev | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for row in cell_rows(mesh):
+        if row["status"] == "skip":
+            lines.append(f"| {row['arch']} | {row['shape']} | "
+                         f"skip({row['reason'][:40]}…) | | | | | | | |")
+        elif row["status"] in ("missing", "FAIL"):
+            lines.append(f"| {row['arch']} | {row['shape']} | "
+                         f"**{row['status']}** | | | | | | | |")
+        else:
+            pk = row["peak_bytes"]
+            lines.append(
+                f"| {row['arch']} | {row['shape']} | "
+                f"{_fmt_t(row['t_compute'])} | {_fmt_t(row['t_memory'])} |"
+                f" {_fmt_t(row['t_collective'])} | {row['dominant']} | "
+                f"{row['roofline_fraction']:.3f} | "
+                f"{(row['useful_ratio'] or 0):.2f} | "
+                f"{pk/2**30:.1f}GiB | "
+                f"{'yes' if row['fits'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def run(report) -> None:
+    for mesh in ("single", "multi"):
+        rows = cell_rows(mesh)
+        done = [r for r in rows if r["status"] == "ok"]
+        skip = [r for r in rows if r["status"] == "skip"]
+        fail = [r for r in rows if r["status"] == "FAIL"]
+        missing = [r for r in rows if r["status"] == "missing"]
+        report.row(
+            "roofline", f"dryrun[{mesh}] 40-cell sweep",
+            compiled=len(done), skipped=len(skip), failed=len(fail),
+            missing=len(missing),
+            ok=(not fail and not missing and len(skip) == 7))
+        if mesh == "single" and done:
+            worst = min(done, key=lambda r: r["roofline_fraction"])
+            coll = max(done, key=lambda r: r["t_collective"]
+                       / max(r["t_compute"] + r["t_memory"], 1e-12))
+            report.row(
+                "roofline", "extremes",
+                worst_fraction=f"{worst['arch']}/{worst['shape']} "
+                               f"{worst['roofline_fraction']:.3f}",
+                most_collective=f"{coll['arch']}/{coll['shape']}",
+                ok=True)
+
+
+if __name__ == "__main__":
+    from benchmarks.run import Report
+    rep = Report()
+    run(rep)
+    rep.print()
+    print()
+    print(markdown_table())

@@ -1,0 +1,74 @@
+"""Benchmark harness — one module per paper table/figure plus the
+TPU-adapted DSE, GEMM micro-bench and the dry-run roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3,tpu_dse]
+
+Every row prints ``bench,name,key=value,...,ok``; the process exits
+non-zero if any row fails its check, so this doubles as an integration
+gate (paper-fidelity regression suite).
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+from typing import List
+
+MODULES = (
+    "table2_memory_model",
+    "table3_versal_dse",
+    "table4_stratix_dse",
+    "fig7_scalability",
+    "tpu_dse",
+    "gemm_bench",
+    "roofline_report",
+    "perf_iterations",
+)
+
+
+class Report:
+    def __init__(self):
+        self.rows: List[dict] = []
+
+    def row(self, bench: str, name: str, ok: bool = True, **fields):
+        self.rows.append(dict(bench=bench, name=name, ok=ok, **fields))
+
+    @property
+    def failures(self) -> int:
+        return sum(1 for r in self.rows if not r["ok"])
+
+    def print(self) -> None:
+        for r in self.rows:
+            extra = ",".join(f"{k}={v}" for k, v in r.items()
+                             if k not in ("bench", "name", "ok"))
+            status = "ok" if r["ok"] else "FAIL"
+            print(f"{r['bench']},{r['name']},{extra},{status}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    report = Report()
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            mod.run(report)
+        except Exception as e:                      # pragma: no cover
+            report.row(name, "run", ok=False, error=repr(e)[:200])
+        print(f"# {name} ({time.time()-t0:.1f}s)", file=sys.stderr)
+    report.print()
+    n_fail = report.failures
+    print(f"# {len(report.rows)} rows, {n_fail} failures",
+          file=sys.stderr)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

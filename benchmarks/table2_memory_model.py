@@ -1,0 +1,59 @@
+"""Paper Table II: memory-model estimates vs Vitis HLS AUTO mapping.
+
+Reproduces, for the four published (U,V,W,pattern) solutions: the model's
+{A,B,C}->{BRAM,URAM} mapping, its exact BRAM/URAM counts, the HLS-AUTO
+counts, and whether AUTO over-allocates URAM beyond the device (the
+paper's PnR-failure mode on 5/10 top designs).
+"""
+
+from __future__ import annotations
+
+from repro.core import paper_model as pm
+from repro.core.hardware import VERSAL_VC1902
+from repro.core.paper_tables import VERSAL_TABLE2
+
+
+def rows():
+    out = []
+    for ref in VERSAL_TABLE2:
+        sol = pm.MAXEVA_P1 if ref.pattern == "P1" else pm.MAXEVA_P2
+        geom = pm.versal_buffer_geometry(sol, ref.u, ref.v, ref.w)
+        mapping, brams, urams = pm.versal_best_mapping(geom)
+        auto_map, a_brams, a_urams, fails = pm.versal_hls_auto_mapping(geom)
+        out.append({
+            "design": f"{ref.u}x{ref.v}x{ref.w} ({ref.pattern})",
+            "model_mapping": "".join(mapping),
+            "model_brams": int(brams), "model_urams": int(urams),
+            "ref_brams": ref.model_brams, "ref_urams": ref.model_urams,
+            "auto_brams": int(a_brams), "auto_urams": int(a_urams),
+            "ref_auto_brams": ref.auto_brams,
+            "ref_auto_urams": ref.auto_urams,
+            "auto_fails": fails, "ref_auto_fails": ref.auto_fails,
+            "match": (int(brams) == ref.model_brams
+                      and int(urams) == ref.model_urams
+                      and "".join(mapping) == "".join(ref.mapping)
+                      and int(a_urams) == ref.auto_urams
+                      and fails == ref.auto_fails),
+        })
+    return out
+
+
+def run(report) -> None:
+    b36, u288 = VERSAL_VC1902.bram_36k, VERSAL_VC1902.uram_288k
+    for r in rows():
+        report.row(
+            "table2", r["design"],
+            model=f"{r['model_mapping']} B={r['model_brams']} "
+                  f"({100*r['model_brams']/b36:.0f}%) "
+                  f"U={r['model_urams']} ({100*r['model_urams']/u288:.0f}%)",
+            reference=f"B={r['ref_brams']} U={r['ref_urams']}",
+            auto=f"B={r['auto_brams']} U={r['auto_urams']}"
+                 f"{' FAILS-PnR' if r['auto_fails'] else ''}",
+            ok=r["match"])
+
+
+if __name__ == "__main__":
+    from benchmarks.run import Report
+    rep = Report()
+    run(rep)
+    rep.print()

@@ -1,0 +1,48 @@
+"""End-to-end serving driver: batched requests through the decode engine.
+
+Prefills a batch of variable-intent prompts, decodes greedily with
+per-sequence EOS masking, and reports tokens/s — the production
+``repro.launch.serve`` path on a host mesh.  Exercises three model
+families (dense GQA, sliding-window, SSM) to show the same engine serves
+attention and attention-free caches alike.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.launch.serve import load_params
+from repro.serve.engine import DecodeEngine
+
+ARCHS = ("smollm-360m", "h2o-danube-3-4b", "mamba2-370m")
+BATCH, PROMPT, STEPS = 4, 24, 12
+
+
+def main() -> None:
+    mesh = make_host_mesh(data=len(jax.devices()))
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        params = load_params(cfg, mesh)
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab, (BATCH, PROMPT)), jnp.int32)
+        with shd.use_mesh(mesh):
+            engine = DecodeEngine(params, cfg, batch=BATCH,
+                                  max_len=PROMPT + STEPS,
+                                  eos_id=cfg.vocab - 1)
+            t0 = time.time()
+            res = engine.generate(prompts, STEPS)
+            dt = time.time() - t0
+        print(f"[{arch:20s}] {res.steps} steps x {BATCH} seqs "
+              f"in {dt:5.2f}s -> {res.tokens[0][:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Sharded-manifest checkpointing with atomic commits and async saves.
+
+Layout on disk:
+
+    <dir>/step_<N>/manifest.json     tree structure, shapes, dtypes
+    <dir>/step_<N>/arrays.npz        leaf arrays keyed by tree path
+    <dir>/step_<N>/COMMITTED         written last -> crash-safe marker
+
+Restore targets any mesh: arrays are stored logically (unsharded) and
+``device_put`` with the target sharding re-shards on load, which is what
+the elastic re-mesh test exercises (train on mesh A, restore onto mesh
+B).  At real multi-host scale each host would write only its addressable
+shards with an index into the manifest; the manifest/commit protocol here
+is the same.
+
+Async: ``save(..., blocking=False)`` snapshots to host memory
+synchronously (so training can donate/overwrite buffers) and writes the
+files on a background thread; ``wait()`` joins.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def pstr(path):
+        out = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                out.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                out.append(str(p.idx))
+            else:
+                out.append(str(p))
+        return "/".join(out)
+
+    return [(pstr(path), leaf) for path, leaf in flat]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.directory = directory
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, tree, blocking: bool = True) -> None:
+        # Snapshot to host memory NOW (donation-safe), write maybe later.
+        flat = [(k, np.asarray(v)) for k, v in _flatten(tree)]
+        treedef = jax.tree_util.tree_structure(tree)
+        self.wait()                 # never two writers at once
+        if blocking:
+            self._write(step, flat, treedef)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, treedef), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat, treedef) -> None:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = f"{final}.tmp{os.getpid()}_{threading.get_ident()}"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        # ml_dtypes arrays (bf16/fp8, numpy kind 'V') don't survive
+        # npz round-trips — store their raw bytes; restore views them
+        # back through the manifest dtype
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: (np.atleast_1d(v).view(np.uint8)
+                        if v.dtype.kind == "V" else v)
+                    for k, v in flat})
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "leaves": [{"key": k, "shape": list(v.shape),
+                        "dtype": str(v.dtype)} for k, v in flat],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+            f.write("ok")
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.directory,
+                                       f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self) -> List[int]:
+        out = []
+        import re
+        for name in sorted(os.listdir(self.directory)):
+            full = os.path.join(self.directory, name)
+            if re.fullmatch(r"step_\d{8}", name) \
+                    and os.path.exists(os.path.join(full, "COMMITTED")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target, step: Optional[int] = None,
+                shardings=None):
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        shardings for elastic re-mesh placement."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat_t = _flatten(target)
+        treedef = jax.tree_util.tree_structure(target)
+        flat_s = _flatten(shardings)if shardings is not None else None
+        leaves = []
+        for i, (key, tgt) in enumerate(flat_t):
+            arr = data[key]
+            want = np.dtype(tgt.dtype)
+            if arr.dtype != want and want.kind == "V":
+                arr = arr.view(want).reshape(tgt.shape)  # bytes -> ml_dtypes
+            assert tuple(arr.shape) == tuple(tgt.shape), \
+                (key, arr.shape, tgt.shape)
+            if arr.dtype != want:
+                arr = arr.astype(want)
+            if flat_s is not None:
+                arr = jax.device_put(arr, flat_s[i][1])
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,7 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_IDS,
+    ModelConfig,
+    all_configs,
+    get_config,
+    get_smoke_config,
+)

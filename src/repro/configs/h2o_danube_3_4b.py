@@ -1,0 +1,23 @@
+"""h2o-danube-3-4b — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818; unverified].
+
+SWA window 4096 bounds the KV cache -> sub-quadratic -> long_500k RUNS
+(ring-buffer caches of 4096 slots at 524k positions).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8,
+    d_ff=10240, vocab=32000, head_dim=120,
+    window=4096,
+    notes="SWA -> long_500k runs",
+))
+
+register(ModelConfig(
+    name="h2o-danube-3-4b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=512, head_dim=16, window=32,
+    dtype="float32",
+))

@@ -1,0 +1,27 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (384 experts, top-8)
+[arXiv:2501.kimi2; unverified].
+
+~1.03e12 total / ~32e9 active parameters.  EP posture: expert dim sharded
+over 'model'; expert d_model/d_ff dims sharded over 'data' (2D weight
+sharding — AdamW states would not fit; the trainer selects Adafactor for
+this config, see repro.optim).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+    d_ff=2048, vocab=163840, head_dim=112,
+    layer_pattern=("moe",), n_experts=384, top_k=8,
+    notes="MoE 384e top-8; full attention -> long_500k skipped",
+))
+
+register(ModelConfig(
+    name="kimi-k2-1t-a32b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=64, vocab=512, head_dim=16,
+    layer_pattern=("moe",), n_experts=8, top_k=2,
+    dtype="float32",
+    capacity_factor=8.0,
+))

@@ -1,0 +1,26 @@
+"""mamba2-370m — attention-free SSD (state-space duality)
+[arXiv:2405.21060; unverified].
+
+d_inner = 2*d_model, head_dim 64, scalar decay per head, d_state 128.
+Attention-free: O(1) decode state -> long_500k RUNS.  The paper's tiled-
+GEMM methodology still applies: SSD's chunked form is matmul-dominated
+(DESIGN.md SSArch-applicability).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=0, vocab=50280, ssm_state=128,
+    layer_pattern=("ssm",),
+    notes="attention-free; long_500k runs (O(1) state)",
+))
+
+register(ModelConfig(
+    name="mamba2-370m-smoke", family="ssm",
+    n_layers=2, d_model=64, n_heads=2, n_kv_heads=2,
+    d_ff=0, vocab=512, ssm_state=16,
+    layer_pattern=("ssm",),
+    dtype="float32",
+))

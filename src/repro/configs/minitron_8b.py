@@ -1,0 +1,17 @@
+"""minitron-8b — pruned Nemotron dense LM [arXiv:2407.14679; hf]."""
+
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=16384, vocab=256000, head_dim=128,
+    notes="full attention -> long_500k skipped (quadratic)",
+))
+
+register(ModelConfig(
+    name="minitron-8b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab=512, head_dim=16,
+    dtype="float32",
+))

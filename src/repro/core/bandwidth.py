@@ -1,0 +1,77 @@
+"""HBM traffic model per tiling — the Table III/IV 'BW' column analogue.
+
+The paper computes, per design, the worst-case off-chip bytes needed to
+sustain the accelerator's native throughput and *gates* the DSE on the
+device's DRAM bandwidth.  Here the 'off-chip' level is HBM and the gate is
+the roofline: a tiling whose HBM traffic pushes the memory term above the
+compute term is memory-bound and ranked accordingly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hardware import TPU_V5E, TPUChip
+from repro.core.tiling import GemmProblem, TileConfig, dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficEstimate:
+    """Modeled HBM traffic and roofline terms for one (tile, problem)."""
+
+    hbm_bytes: float          # total HBM bytes moved
+    flops: float              # padded (executed) flops
+    t_compute: float          # s
+    t_memory: float           # s
+    arithmetic_intensity: float
+
+    @property
+    def t_model(self) -> float:
+        """Roofline execution-time estimate (perfect overlap)."""
+        return max(self.t_compute, self.t_memory)
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.t_compute >= self.t_memory else "memory"
+
+
+def hbm_traffic_bytes(tile: TileConfig, p: GemmProblem) -> float:
+    """Worst-case HBM bytes for one GEMM under a tiling.
+
+    * ``aie`` (output-stationary, grid m,n,k): every A panel is re-read
+      once per n-block column, every B panel once per m-block row, C is
+      written once.  (A reused gn times from VMEM's perspective — the
+      paper's 'A reused W times'.)
+    * ``tb`` (A-stationary, grid m,k,n): A is read once; B re-read per
+      m-block row; C is read+written once per k step (PL-accumulator
+      pattern).
+    """
+    gm, gn, gk = tile.grid(p)
+    pm_, pk, pn = tile.padded_dims(p)
+    in_b = dtype_bytes(p.in_dtype)
+    out_b = dtype_bytes(p.out_dtype)
+    acc_b = dtype_bytes(p.acc_dtype)
+    a_bytes = pm_ * pk * in_b
+    b_bytes = pk * pn * in_b
+    c_bytes = pm_ * pn * out_b
+    if tile.strategy == "aie":
+        return a_bytes * gn + b_bytes * gm + c_bytes
+    # 'tb'
+    c_rmw = pm_ * pn * acc_b
+    return a_bytes + b_bytes * gm + c_rmw * (2 * gk - 1) + c_bytes
+
+
+def estimate(tile: TileConfig, p: GemmProblem, chip: TPUChip = TPU_V5E
+             ) -> TrafficEstimate:
+    pm_, pk, pn = tile.padded_dims(p)
+    flops = 2.0 * pm_ * pk * pn
+    peak = chip.peak_int8_ops if dtype_bytes(p.in_dtype) == 1 \
+        else chip.peak_bf16_flops
+    hbm = hbm_traffic_bytes(tile, p)
+    return TrafficEstimate(
+        hbm_bytes=hbm,
+        flops=flops,
+        t_compute=flops / peak,
+        t_memory=hbm / chip.hbm_bw,
+        arithmetic_intensity=flops / hbm,
+    )

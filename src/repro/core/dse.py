@@ -1,0 +1,129 @@
+"""Reuse-maximizing tiling DSE — the paper's IP formulation on TPU.
+
+The paper solves, exhaustively, ``max U*V*W`` (on-chip data reuse) subject
+to buffer-depth and block-capacity constraints, then gates designs on
+off-chip bandwidth.  The TPU formulation is isomorphic:
+
+    maximize   on-chip reuse  == minimize modeled HBM traffic
+    subject to VMEM capacity  (repro.core.memory_model.fits_vmem)
+               MXU alignment  (lane/sublane multiples)
+    ranked by  roofline time, then traffic, then VMEM efficiency
+
+and the two dataflow strategies ('aie' / 'tb') are searched jointly, the
+way the paper searches {A,B,C} -> {BRAM,URAM} mapping permutations.
+
+``solve()`` is exhaustive over the candidate grid (the paper solves its IP
+"exhaustively" too) and is cached per problem signature — kernels call it
+at trace time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.bandwidth import TrafficEstimate, estimate
+from repro.core.hardware import TPU_V5E, TPUChip
+from repro.core.memory_model import (
+    fits_vmem,
+    vmem_efficiency,
+    vmem_footprint,
+)
+from repro.core.tiling import (
+    STRATEGIES,
+    GemmProblem,
+    TileConfig,
+    min_sublane,
+    round_up,
+)
+
+# Candidate block edges.  Lane-dim candidates are 128-multiples (MXU edge);
+# the m-dim additionally admits small sublane multiples so that skinny
+# GEMMs (decode: m = batch) tile without pathological padding.
+_LANE_CANDIDATES = (128, 256, 512, 1024, 2048)
+_M_EXTRA = (8, 16, 32, 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileDesign:
+    """One scored point of the DSE (a Table III/IV row analogue)."""
+
+    tile: TileConfig
+    traffic: TrafficEstimate
+    vmem_bytes: int
+    vmem_eff: float
+    tile_eff: float
+
+    @property
+    def score(self) -> Tuple:
+        # Primary: modeled roofline time.  Ties: less HBM traffic, higher
+        # VMEM efficiency, smaller footprint.
+        return (self.traffic.t_model, self.traffic.hbm_bytes,
+                -self.vmem_eff, self.vmem_bytes)
+
+
+def _m_candidates(m: int, dtype, chip: TPUChip) -> Sequence[int]:
+    base = [c for c in _LANE_CANDIDATES]
+    sub = min_sublane(dtype, chip)
+    extra = [c for c in _M_EXTRA if c >= sub]
+    cands = sorted(set(base + extra))
+    # never tile beyond the (padded) problem dim
+    cap = round_up(m, sub)
+    return [c for c in cands if c <= max(cap, cands[0])] or [cands[0]]
+
+
+def _lane_candidates(dim: int) -> Sequence[int]:
+    cap = round_up(dim, 128)
+    out = [c for c in _LANE_CANDIDATES if c <= cap]
+    return out or [128]
+
+
+@functools.lru_cache(maxsize=4096)
+def _solve_cached(m: int, k: int, n: int, in_dtype: str, out_dtype: str,
+                  acc_dtype: str, chip_name: str, budget_fraction: float,
+                  top: int) -> Tuple["TileDesign", ...]:
+    assert chip_name == TPU_V5E.name, "single-target build"
+    chip = TPU_V5E
+    p = GemmProblem(m, k, n, in_dtype, out_dtype, acc_dtype)
+    designs: List[TileDesign] = []
+    for strategy in STRATEGIES:
+        for bm in _m_candidates(m, in_dtype, chip):
+            for bk in _lane_candidates(k):
+                for bn in _lane_candidates(n):
+                    tile = TileConfig(bm, bk, bn, strategy)
+                    if not tile.mxu_aligned(chip):
+                        continue
+                    if not fits_vmem(tile, p, chip, budget_fraction):
+                        continue
+                    designs.append(TileDesign(
+                        tile=tile,
+                        traffic=estimate(tile, p, chip),
+                        vmem_bytes=vmem_footprint(tile, p, chip).total,
+                        vmem_eff=vmem_efficiency(tile, p, chip),
+                        tile_eff=tile.tile_efficiency(p),
+                    ))
+    if not designs:
+        raise ValueError(f"no feasible tiling for {p}")
+    designs.sort(key=lambda d: d.score)
+    return tuple(designs[:top])
+
+
+def solve(p: GemmProblem, chip: TPUChip = TPU_V5E,
+          budget_fraction: float = 0.75, top: int = 10
+          ) -> List[TileDesign]:
+    """Ranked tiling designs for a GEMM problem."""
+    return list(_solve_cached(p.m, p.k, p.n, p.in_dtype, p.out_dtype,
+                              p.acc_dtype, chip.name, budget_fraction, top))
+
+
+def best_tile(m: int, k: int, n: int, in_dtype: str = "bfloat16",
+              out_dtype: str = "bfloat16", acc_dtype: str = "float32",
+              strategy: Optional[str] = None) -> TileConfig:
+    """The DSE winner (optionally restricted to one strategy) — what
+    ``repro.kernels.ops.gemm`` uses when no tile is given."""
+    p = GemmProblem(m, k, n, in_dtype, out_dtype, acc_dtype)
+    for d in solve(p):
+        if strategy is None or d.tile.strategy == strategy:
+            return d.tile
+    raise ValueError(f"no feasible {strategy!r} tiling for {p}")

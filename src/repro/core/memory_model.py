@@ -1,0 +1,106 @@
+"""VMEM footprint model — the eq. 4-5 / eq. 12-14 analogue for TPU.
+
+The paper predicts physical BRAM/URAM/M20K block usage from logical buffer
+geometry and *rejects* tilings that over-subscribe the device (the failure
+HLS-AUTO hits).  On TPU the physical resource is VMEM: every Pallas block
+is padded to (sublane, lane) tiles, the software pipeline double-buffers
+HBM<->VMEM streams, and accumulators live in VMEM scratch.  This module
+predicts those bytes exactly the same way the paper predicts block counts,
+and the DSE (:mod:`repro.core.dse`) uses it as its capacity constraint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.hardware import TPU_V5E, TPUChip
+from repro.core.tiling import (
+    GemmProblem,
+    TileConfig,
+    dtype_bytes,
+    min_sublane,
+    round_up,
+)
+
+# Pallas pipelines HBM->VMEM streams with two in-flight stages.
+PIPELINE_STAGES = 2
+
+
+def padded_tile_bytes(rows: int, cols: int, dtype, chip: TPUChip = TPU_V5E
+                      ) -> int:
+    """Physical VMEM bytes of one (rows, cols) block after (sublane, lane)
+    padding — the f_B/f_U analogue: logical size -> physical size."""
+    pr = round_up(rows, min_sublane(dtype, chip))
+    pc = round_up(cols, chip.lane)
+    return pr * pc * dtype_bytes(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemFootprint:
+    """Per-buffer VMEM bytes for one kernel instance."""
+
+    a_bytes: int
+    b_bytes: int
+    out_bytes: int
+    acc_bytes: int
+
+    @property
+    def total(self) -> int:
+        return self.a_bytes + self.b_bytes + self.out_bytes + self.acc_bytes
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self) | {"total": self.total}
+
+
+def vmem_footprint(tile: TileConfig, p: GemmProblem,
+                   chip: TPUChip = TPU_V5E) -> VmemFootprint:
+    """Predict the kernel's VMEM working set.
+
+    * ``aie`` (output-stationary): A and B blocks stream (x pipeline
+      stages); the fp32/int32 accumulator is a persistent scratch; the out
+      block streams.
+    * ``tb`` (A-stationary): the A block is resident (single copy); B and
+      the read-modify-written C stream (x pipeline stages each way).
+    """
+    a = padded_tile_bytes(tile.bm, tile.bk, p.in_dtype, chip)
+    b = padded_tile_bytes(tile.bk, tile.bn, p.in_dtype, chip)
+    o = padded_tile_bytes(tile.bm, tile.bn, p.out_dtype, chip)
+    acc = padded_tile_bytes(tile.bm, tile.bn, p.acc_dtype, chip)
+    if tile.strategy == "aie":
+        return VmemFootprint(
+            a_bytes=PIPELINE_STAGES * a,
+            b_bytes=PIPELINE_STAGES * b,
+            out_bytes=PIPELINE_STAGES * o,
+            acc_bytes=acc,
+        )
+    # 'tb': A resident; C is both input and output stream (read-modify-
+    # write accumulation in the output buffer, like the paper's PL adders).
+    return VmemFootprint(
+        a_bytes=a,
+        b_bytes=PIPELINE_STAGES * b,
+        out_bytes=2 * PIPELINE_STAGES * padded_tile_bytes(
+            tile.bm, tile.bn, p.acc_dtype, chip),
+        acc_bytes=0,
+    )
+
+
+def vmem_efficiency(tile: TileConfig, p: GemmProblem,
+                    chip: TPUChip = TPU_V5E) -> float:
+    """Logical bytes / physical (padded) bytes — the paper's RAM
+    *efficiency* metric carried to VMEM tiles."""
+    logical = (tile.bm * tile.bk + tile.bk * tile.bn) \
+        * dtype_bytes(p.in_dtype) + tile.bm * tile.bn \
+        * dtype_bytes(p.out_dtype)
+    a = padded_tile_bytes(tile.bm, tile.bk, p.in_dtype, chip)
+    b = padded_tile_bytes(tile.bk, tile.bn, p.in_dtype, chip)
+    o = padded_tile_bytes(tile.bm, tile.bn, p.out_dtype, chip)
+    return logical / (a + b + o)
+
+
+def fits_vmem(tile: TileConfig, p: GemmProblem, chip: TPUChip = TPU_V5E,
+              budget_fraction: float = 0.75) -> bool:
+    """Capacity constraint (eq. 7-8/15 analogue).  ``budget_fraction``
+    reserves headroom for the compiler's own VMEM needs."""
+    return vmem_footprint(tile, p, chip).total \
+        <= budget_fraction * chip.vmem_bytes

@@ -1,0 +1,127 @@
+"""Multi-level GEMM tiling on the TPU memory hierarchy.
+
+This is the Fig. 3 analogue.  The paper tiles GEMM across four levels
+(AIE kernel -> AIE array -> PL buffers -> DDR); on TPU the levels are:
+
+    level 1  MXU micro-tile        128x128x128 systolic pass (hardware)
+    level 2  Pallas VMEM block     (bm, bk, bn)   <- this module
+    level 3  per-chip HBM shard    set by the sharding layout (dist level)
+    level 4  mesh                  ('data','model'[, 'pod']) partitioning
+
+The paper's *compute GEMM size* maps to the VMEM block (bm,bk,bn); the
+*native buffer size* maps to the per-chip working set; U,V,W reuse maps
+to the grid trip counts along each block dimension.
+
+Two dataflow *strategies* mirror the paper's two devices (SS IV):
+
+* ``aie``  — output-stationary: grid (m,n,k), k innermost, partial sums
+  held in a VMEM accumulator, written once (Versal: adder-tree reduction
+  next to the compute, C leaves the array once).
+* ``tb``   — A-stationary: grid (m,k,n), n innermost, the A block stays
+  resident in VMEM while the B stream passes through; C is
+  read-modified-written per k step (Stratix: A blocks pinned in TB
+  ping-pong registers, B broadcast, accumulation cascaded outward).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.hardware import TPU_V5E, TPUChip
+
+STRATEGIES = ("aie", "tb")
+
+
+def dtype_bytes(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def min_sublane(dtype, chip: TPUChip = TPU_V5E) -> int:
+    """Minimum second-to-last-dim tile for a dtype (8 fp32 / 16 bf16 /
+    32 int8)."""
+    return chip.sublanes * max(1, 4 // dtype_bytes(dtype))
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmProblem:
+    """A logical (M, K, N) GEMM with operand/accumulator dtypes."""
+
+    m: int
+    k: int
+    n: int
+    in_dtype: str = "bfloat16"
+    out_dtype: str = "bfloat16"
+    acc_dtype: str = "float32"
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.k * self.n
+
+    @property
+    def in_bytes(self) -> int:
+        b = dtype_bytes(self.in_dtype)
+        return (self.m * self.k + self.k * self.n) * b
+
+    @property
+    def out_bytes(self) -> int:
+        return self.m * self.n * dtype_bytes(self.out_dtype)
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / (self.in_bytes + self.out_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """A level-2 (VMEM) tiling choice — the paper's (U,V,W)+mapping
+    analogue for one GEMM."""
+
+    bm: int
+    bk: int
+    bn: int
+    strategy: str = "aie"
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+
+    def grid(self, p: GemmProblem) -> Tuple[int, int, int]:
+        """Trip counts (gm, gn, gk) — the U,W,V reuse analogue."""
+        return (cdiv(p.m, self.bm), cdiv(p.n, self.bn), cdiv(p.k, self.bk))
+
+    def padded_dims(self, p: GemmProblem) -> Tuple[int, int, int]:
+        gm, gn, gk = self.grid(p)
+        return (gm * self.bm, gk * self.bk, gn * self.bn)
+
+    def tile_efficiency(self, p: GemmProblem) -> float:
+        """Useful fraction of the padded compute — the paper's zero-padding
+        scalability effect (Fig. 7b / 8)."""
+        pm_, pk, pn = self.padded_dims(p)
+        return (p.m * p.k * p.n) / (pm_ * pk * pn)
+
+    def mxu_aligned(self, chip: TPUChip = TPU_V5E) -> bool:
+        """MXU-friendly: lane dims multiples of 128, sublane dim aligned."""
+        return (self.bn % chip.lane == 0 and self.bk % chip.lane == 0
+                and self.bm % chip.sublanes == 0)
+
+
+def compute_gemm_size(tile: TileConfig) -> Tuple[int, int, int]:
+    """The paper's 'compute GEMM size' — one block-level multiply."""
+    return (tile.bm, tile.bk, tile.bn)
+
+
+def native_working_set(tile: TileConfig, p: GemmProblem) -> Tuple[int, int, int]:
+    """The paper's 'native buffer size' — dims resident per chip."""
+    return tile.padded_dims(p)

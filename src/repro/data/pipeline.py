@@ -1,0 +1,92 @@
+"""Deterministic synthetic LM data pipeline, shard-aware.
+
+Real multi-pod training streams tokenized shards; here the substrate is a
+deterministic generator (seeded per (step, host-shard)) with the same
+interface, so restarts are bit-reproducible (the checkpoint/restart test
+relies on this) and every host generates only its slice of the global
+batch.
+
+Batches carry next-token-prediction pairs plus the per-family stub
+modality inputs (audio frames / vision patch embeddings).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # host sharding: this host materializes rows [row_start, row_start+rows)
+    row_start: int = 0
+    rows: Optional[int] = None      # None = full global batch
+
+
+def _tokens(rng: np.random.Generator, shape, vocab: int) -> np.ndarray:
+    """Markov-ish synthetic stream: mixture of a random walk and uniform
+    resets, so the LM loss is learnable (used by convergence tests)."""
+    walk = rng.integers(0, vocab, size=shape, dtype=np.int64)
+    out = np.cumsum(walk, axis=-1) % vocab
+    resets = rng.random(shape) < 0.1
+    out = np.where(resets, walk, out)
+    return out.astype(np.int32)
+
+
+def make_batch(cfg: ModelConfig, data: DataConfig, step: int
+               ) -> Dict[str, jax.Array]:
+    """Deterministic batch for ``step`` (this host's rows only)."""
+    rows = data.rows if data.rows is not None else data.global_batch
+    rng = np.random.default_rng(
+        np.random.SeedSequence([data.seed, step, data.row_start]))
+    s = data.seq_len
+    text_len = s - (cfg.prefix_tokens or 0)
+    stream = _tokens(rng, (rows, text_len + 1), cfg.vocab)
+    batch: Dict[str, jax.Array] = {
+        "tokens": jnp.asarray(stream[:, :-1]),
+        "labels": jnp.asarray(stream[:, 1:]),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((rows, cfg.encoder_seq, cfg.d_model),
+                                dtype=np.float32), dtype=cfg.dtype)
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((rows, cfg.prefix_tokens, cfg.d_model),
+                                dtype=np.float32), dtype=cfg.dtype)
+    return batch
+
+
+def iterate(cfg: ModelConfig, data: DataConfig, start_step: int = 0
+            ) -> Iterator[Dict[str, jax.Array]]:
+    step = start_step
+    while True:
+        yield make_batch(cfg, data, step)
+        step += 1
+
+
+def batch_spec(cfg: ModelConfig, data: DataConfig) -> Dict:
+    """ShapeDtypeStructs matching :func:`make_batch` (dry-run inputs)."""
+    rows = data.rows if data.rows is not None else data.global_batch
+    s = data.seq_len
+    text_len = s - (cfg.prefix_tokens or 0)
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((rows, text_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((rows, text_len), jnp.int32),
+    }
+    if cfg.family == "audio":
+        spec["frames"] = jax.ShapeDtypeStruct(
+            (rows, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        spec["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (rows, cfg.prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    return spec

@@ -1,0 +1,96 @@
+"""Blocked online-softmax attention in pure lax ops (no Pallas).
+
+This is the XLA-lowerable twin of :mod:`repro.kernels.flash_attention`:
+same tiling (q chunks x kv chunks), same online-softmax recurrence, but
+expressed with ``lax.map``/``lax.scan`` so it runs and *lowers* on any
+backend — which is what the multi-pod dry-run compiles.  Peak score
+memory is (b, heads, bq, bkv) instead of (b, heads, S, S): at 32k
+prefill that's the difference between ~8 MB and ~4 GB per device.
+
+The kv-step is wrapped in ``jax.checkpoint`` so backward recomputes
+scores instead of storing every chunk's probabilities (the standard
+flash-attention backward trade, here at the XLA level).
+
+GQA is handled by head-grouped einsums (no kv-head materialization).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import NEG_INF
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq",
+                                             "bkv", "scale", "q_offset"))
+def attention_blocked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      scale: Optional[float] = None,
+                      q_offset: Optional[int] = None,
+                      bq: int = 512, bkv: int = 1024) -> jax.Array:
+    """q: (b, sq, hq, d); k/v: (b, skv, hkv, d) -> (b, sq, hq, d)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    if q_offset is None:
+        q_offset = skv - sq
+    scale_f = float(scale if scale is not None else d ** -0.5)
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+
+    pad_q = (-sq) % bq
+    pad_kv = (-skv) % bkv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nk = (sq + pad_q) // bq, (skv + pad_kv) // bkv
+
+    # (nq, b, bq, hkv, g, d) — q-chunks on the leading map axis
+    qc = qp.reshape(b, nq, bq, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kc = kp.reshape(b, nk, bkv, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nk, bkv, hkv, d).transpose(1, 0, 2, 3, 4)
+    qpos = (jnp.arange(nq * bq) + q_offset).reshape(nq, bq)
+    kpos = jnp.arange(nk * bkv).reshape(nk, bkv)
+
+    def kv_step(carry, inp):
+        m, l, acc, qck, qpos_c = carry
+        kck, vck, kpos_c = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk",
+                       qck.astype(jnp.float32) * scale_f,
+                       kck.astype(jnp.float32))
+        valid = (kpos_c < skv)[None, :]
+        if causal:
+            valid = valid & (kpos_c[None, :] <= qpos_c[:, None])
+        if window > 0:
+            valid = valid & (kpos_c[None, :] > qpos_c[:, None] - window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha[..., 0, None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vck.astype(jnp.float32))
+        return (m_new, l_new, acc_new, qck, qpos_c), None
+
+    def q_chunk(args):
+        qck, qpos_c = args
+        m0 = jnp.full((b, hkv, g, bq, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq, 1), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, d), jnp.float32)
+        (m, l, acc, _, _), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0, qck, qpos_c),
+            (kc, vc, kpos))
+        out = acc / jnp.where(l > 0, l, 1.0)
+        # (b, hkv, g, bq, d) -> (b, bq, hkv, g, d)
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    out = jax.lax.map(q_chunk, (qc, qpos))            # (nq, b, bq, hkv, g, d)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * bq, hq, d)
+    return out[:, :sq]

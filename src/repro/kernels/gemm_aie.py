@@ -1,0 +1,77 @@
+"""Output-stationary Pallas GEMM — the Versal AIE dataflow on TPU.
+
+Paper mapping (SS IV-A): on Versal, each AIE core computes an MxKxN block
+and adder trees reduce partial products across the Y (reduction) axis
+*before* anything leaves the array, so each C element is written once.
+The TPU analogue is an output-stationary kernel: grid (m, n, k) with k
+innermost, partial sums held in a VMEM scratch accumulator (fp32 for
+float operands, int32 for int8 — the paper's 8-bit operand / 32-bit
+accumulation scheme), and the C block written on the last k step.
+
+Block shapes come from the reuse-maximizing DSE (:mod:`repro.core.dse`),
+the way the paper's U,V,W come from its IP solver.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tiling import TileConfig
+
+
+def _acc_dtype(in_dtype) -> jnp.dtype:
+    return jnp.int32 if in_dtype == jnp.int8 else jnp.float32
+
+
+def _gemm_aie_kernel(a_ref, b_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "out_dtype",
+                                             "interpret"))
+def gemm_aie(a: jax.Array, b: jax.Array, *, tile: TileConfig,
+             out_dtype=None, interpret: bool = False) -> jax.Array:
+    """C[m,n] = sum_k A[m,k] B[k,n], output-stationary.
+
+    Dims must be multiples of the tile (ops.py pads — the paper's
+    zero-padding alignment, SS V-C2).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = tile.bm, tile.bk, tile.bn
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        (a.shape, b.shape, tile)
+    acc = _acc_dtype(a.dtype)
+    out_dtype = out_dtype or acc
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_aie_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,86 @@
+"""A-stationary Pallas GEMM — the Stratix Tensor-Block dataflow on TPU.
+
+Paper mapping (SS IV-B): on Stratix, a 3x10 A block is pinned in each
+TB's ping-pong registers while a stream of B blocks is broadcast past it;
+partial dot products cascade outward and are accumulated *into the C
+buffer by PL soft-logic adders* (read-modify-write, II=1).  The TPU
+analogue:
+
+* within one ``pallas_call`` the grid is (m, n) with n innermost — the A
+  block is fetched once per m row and stays VMEM-resident while the B
+  stream (all n blocks) passes it: weight-stationary, like the TB
+  registers;
+* the reduction (K) dimension is chunked *outside* the kernel; each
+  k-chunk re-reads and updates C in place via ``input_output_aliasing``
+  — exactly the paper's PL-accumulator pattern (and its V*Y*K-dimension
+  tile reduction).
+
+This has a genuinely different traffic signature from the output-
+stationary 'aie' kernel (C is rmw-ed gk times but A is read once), which
+is why the DSE searches both.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tiling import TileConfig
+
+
+def _acc_dtype(in_dtype) -> jnp.dtype:
+    return jnp.int32 if in_dtype == jnp.int8 else jnp.float32
+
+
+def _gemm_tb_kernel(a_ref, b_ref, c_ref, o_ref):
+    # One (m,n) visit: accumulate this k-chunk's contribution onto C.
+    o_ref[...] = c_ref[...] + jnp.dot(a_ref[...], b_ref[...],
+                                      preferred_element_type=o_ref.dtype)
+
+
+def _tb_call(a, b, c, *, bm: int, bn: int, interpret: bool):
+    m, k = a.shape
+    _, n = b.shape
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _gemm_tb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),   # A row resident
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),   # B stream
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),  # C rmw in
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        input_output_aliases={2: 0},                      # C updated in place
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b, c)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "out_dtype",
+                                             "interpret"))
+def gemm_tb(a: jax.Array, b: jax.Array, *, tile: TileConfig,
+            out_dtype=None, interpret: bool = False) -> jax.Array:
+    """C[m,n] = sum_k A[m,k] B[k,n], A-stationary with k-chunked
+    PL-style accumulation.  Dims must be tile multiples (ops.py pads)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bk, bn = tile.bm, tile.bk, tile.bn
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        (a.shape, b.shape, tile)
+    acc = _acc_dtype(a.dtype)
+    out_dtype = out_dtype or acc
+    gk = k // bk
+    c = jnp.zeros((m, n), acc)
+    for kk in range(gk):            # k-chunk loop = the paper's V loop
+        a_k = jax.lax.slice(a, (0, kk * bk), (m, (kk + 1) * bk))
+        b_k = jax.lax.slice(b, (kk * bk, 0), ((kk + 1) * bk, n))
+        c = _tb_call(a_k, b_k, c, bm=bm, bn=bn, interpret=interpret)
+    return c.astype(out_dtype)

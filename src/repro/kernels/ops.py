@@ -1,0 +1,202 @@
+"""Public, jit-friendly kernel API — every model GEMM routes through here.
+
+Dispatch policy (the hardware-adaptation contract):
+
+* On TPU (or when ``REPRO_KERNELS=interpret`` forces Pallas-interpret for
+  tests) the Pallas kernels run, with block shapes chosen by the
+  reuse-maximizing DSE (:mod:`repro.core.dse`) unless a ``tile`` is given.
+* Elsewhere (this CPU container, dry-runs) the mathematically identical
+  pure-jnp reference path runs, so models/training/serving behave the
+  same everywhere and the multi-pod dry-run lowers pure XLA.
+
+``gemm`` carries a custom VJP (dA = dC Bᵀ, dB = Aᵀ dC, both routed back
+through ``gemm``) so the Pallas forward is trainable.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dse
+from repro.core.tiling import TileConfig, round_up
+from repro.kernels import ref as _ref
+from repro.kernels.blocked_attention import attention_blocked
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.gemm_aie import gemm_aie
+from repro.kernels.gemm_tb import gemm_tb
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_KERNELS", "auto")
+    if env in ("interpret", "ref", "pallas"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def use_pallas() -> bool:
+    return _mode() in ("pallas", "interpret")
+
+
+def _interpret() -> bool:
+    return _mode() == "interpret"
+
+
+def _pad2(x, m_to, n_to):
+    m, n = x.shape
+    if m == m_to and n == n_to:
+        return x
+    return jnp.pad(x, ((0, m_to - m), (0, n_to - n)))
+
+
+def _gemm_pallas(a: jax.Array, b: jax.Array, tile: TileConfig,
+                 out_dtype) -> jax.Array:
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(tile.bm, round_up(m, 8))
+    bk = min(tile.bk, round_up(k, 128))
+    bn = min(tile.bn, round_up(n, 128))
+    tile = TileConfig(bm, bk, bn, tile.strategy)
+    ap = _pad2(a, round_up(m, bm), round_up(k, bk))
+    bp = _pad2(b, round_up(k, bk), round_up(n, bn))
+    fn = gemm_aie if tile.strategy == "aie" else gemm_tb
+    out = fn(ap, bp, tile=tile, out_dtype=out_dtype,
+             interpret=_interpret())
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _gemm2d(a: jax.Array, b: jax.Array, strategy: Optional[str],
+            tile: Optional[TileConfig], out_dtype) -> jax.Array:
+    if use_pallas():
+        t = tile
+        if t is None:
+            (m, k), n = a.shape, b.shape[1]
+            t = dse.best_tile(m, k, n, str(a.dtype),
+                              str(jnp.dtype(out_dtype)), strategy=strategy)
+        return _gemm_pallas(a, b, t, out_dtype)
+    return _ref.gemm_ref(a, b, out_dtype=out_dtype)
+
+
+def _gemm2d_fwd(a, b, strategy, tile, out_dtype):
+    return _gemm2d(a, b, strategy, tile, out_dtype), (a, b)
+
+
+def _gemm2d_bwd(strategy, tile, out_dtype, res, g):
+    a, b = res
+    g = g.astype(a.dtype)
+    da = _gemm2d(g, b.T, strategy, None, a.dtype)
+    db = _gemm2d(a.T, g, strategy, None, b.dtype)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_gemm2d.defvjp(_gemm2d_fwd, _gemm2d_bwd)
+
+
+def gemm(a: jax.Array, b, *, strategy: Optional[str] = None,
+         tile: Optional[TileConfig] = None,
+         out_dtype=None) -> jax.Array:
+    """C = A @ B.  ``a``: (..., k), ``b``: (k, n).  Leading dims of ``a``
+    are flattened into M (the paper tiles GEMM, models bring (b, s, d)).
+
+    ``b`` may be a weight-only int8 struct ``{"q", "scale"}`` from
+    ``repro.quant`` (the paper's int8 precision as a serving mode) —
+    dequantized on load into ``a``'s dtype, so weight HBM traffic is one
+    byte/element.
+    """
+    if isinstance(b, dict) and {"q", "scale"} <= set(b):
+        b = (b["q"].astype(jnp.float32) * b["scale"]).astype(a.dtype)
+    out_dtype = out_dtype or a.dtype
+    lead = a.shape[:-1]
+    a2 = a.reshape((-1, a.shape[-1]))
+    out = _gemm2d(a2, b, strategy, tile, jnp.dtype(out_dtype))
+    return out.reshape(lead + (b.shape[-1],)).astype(out_dtype)
+
+
+def gemm_int8(a_q, b_q, a_scale, b_scale, *, out_dtype=jnp.float32,
+              tile: Optional[TileConfig] = None):
+    """Quantized GEMM (int8 operands, int32 accumulation, fused dequant) —
+    the paper's precision scheme as a serving-path op."""
+    if use_pallas():
+        m, k = a_q.shape
+        _, n = b_q.shape
+        t = tile or dse.best_tile(m, k, n, "int8", "int8", "int32")
+        acc = _gemm_pallas(a_q, b_q, t, jnp.int32)
+    else:
+        acc = jnp.dot(a_q, b_q, preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * a_scale * b_scale).astype(out_dtype)
+
+
+quantize_int8 = _ref.quantize_int8
+dequantize = _ref.dequantize
+
+
+# Above this many query/kv positions the unblocked reference would
+# materialize (b, h, sq, skv) scores; switch to the blocked XLA path.
+BLOCKED_ATTN_THRESHOLD = 1024
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              scale=None, q_offset=None) -> jax.Array:
+    """Multi-head attention with GQA + optional sliding window.
+
+    Dispatch: Pallas flash kernel on TPU for prefill/train-sized queries;
+    blocked lax implementation (same tiling, XLA-lowerable — what the
+    dry-run compiles) for long sequences elsewhere; plain reference for
+    short ones.  Single-token decode stays on the fused XLA path in the
+    model layer.
+    """
+    sq, skv = q.shape[1], k.shape[1]
+    if use_pallas() and sq >= 128:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, q_offset=q_offset,
+                               interpret=_interpret())
+    if max(sq, skv) > BLOCKED_ATTN_THRESHOLD:
+        return attention_blocked(q, k, v, causal=causal, window=window,
+                                 scale=scale, q_offset=q_offset)
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              scale=scale, q_offset=q_offset)
+
+
+def _decode_attention_xla(q, k_cache, v_cache, pos, *, window):
+    """Head-grouped einsums with operands at storage dtype + fp32
+    accumulation — casting the cache itself to f32 would materialize and
+    rewrite a full-precision copy of the entire stacked cache every
+    layer (measured 1.38 TB/step on deepseek decode_32k)."""
+    b, hq, d = q.shape
+    _, skv, hkv, _ = k_cache.shape
+    groups = hq // hkv
+    qg = q.reshape(b, hkv, groups, d)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                        preferred_element_type=jnp.float32) * d ** -0.5
+    k_pos = jnp.arange(skv)
+    mask = k_pos <= pos
+    if window > 0:
+        mask &= k_pos > pos - window
+    logits = jnp.where(mask[None, None, None, :], logits,
+                       _ref.NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(v_cache.dtype),
+                     v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array,
+                     v_cache: jax.Array, pos: jax.Array, *,
+                     window: int = 0) -> jax.Array:
+    """Single-token attention over a KV cache (serve_step hot-spot).
+
+    Pallas flash-decoding on TPU (k/v streamed through VMEM once at
+    storage dtype, online softmax in scratch); head-grouped einsum with
+    fp32 accumulation elsewhere.  q: (b, hq, d) -> (b, hq, d).
+    """
+    if use_pallas():
+        return flash_decode(q, k_cache, v_cache, pos, window=window,
+                            interpret=_interpret())
+    return _decode_attention_xla(q, k_cache, v_cache, pos,
+                                 window=window)

@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel test sweeps and double as the
+CPU execution path: ``ops.py`` dispatches to these (identical math) when
+not running on TPU, so models are bit-for-bit testable on the host.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30          # large-negative for masking (bf16-safe)
+
+
+def gemm_ref(a: jax.Array, b: jax.Array, *,
+             acc_dtype=jnp.float32, out_dtype=None) -> jax.Array:
+    """C = A @ B with explicit accumulation dtype.
+
+    int8 x int8 accumulates in int32 (the paper's int8 GEMM semantics:
+    8-bit operands, 32-bit accumulation); floats accumulate in fp32.
+
+    REPRO_BF16_REDUCE=1 (experiment, default off): bf16 GEMMs emit bf16
+    dot outputs, so GSPMD's cross-shard partial-sum all-reduces move
+    bf16 instead of f32 — the Megatron convention.  Per-shard K-tiles
+    still accumulate fp32 inside the MXU; the cross-shard sum is what
+    drops precision.  See EXPERIMENTS.md §Perf.
+    """
+    if a.dtype == jnp.int8 and b.dtype == jnp.int8:
+        acc_dtype = jnp.int32
+    import os
+    if (os.environ.get("REPRO_BF16_REDUCE") == "1"
+            and a.dtype == jnp.bfloat16 and b.dtype == jnp.bfloat16
+            and out_dtype is not None
+            and jnp.dtype(out_dtype) == jnp.bfloat16):
+        return jnp.dot(a, b, preferred_element_type=jnp.bfloat16)
+    out = jnp.dot(a.astype(acc_dtype) if a.dtype != jnp.int8 else a,
+                  b.astype(acc_dtype) if b.dtype != jnp.int8 else b,
+                  preferred_element_type=acc_dtype)
+    return out.astype(out_dtype or acc_dtype)
+
+
+def quantize_int8(x: jax.Array, axis: int = -1):
+    """Symmetric per-channel int8 quantization -> (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def gemm_int8_ref(a_q: jax.Array, b_q: jax.Array,
+                  a_scale: jax.Array, b_scale: jax.Array,
+                  out_dtype=jnp.float32) -> jax.Array:
+    """Quantized GEMM: int8 operands, int32 accumulate, fused dequant.
+
+    a_scale: (m, 1) per-row; b_scale: (1, n) per-column.
+    """
+    acc = jnp.dot(a_q, b_q, preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * a_scale * b_scale).astype(out_dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, pos: jax.Array, *,
+                         window: int = 0,
+                         scale: Optional[float] = None) -> jax.Array:
+    """Single-token attention over a cache (flash_decode oracle).
+
+    q: (b, hq, d); caches: (b, S, hkv, d); pos: () int32 — the position
+    just written (slots > pos masked; sliding window masks
+    slots <= pos - window).  Returns (b, hq, d); softmax in fp32.
+    """
+    b, hq, d = q.shape
+    _, skv, hkv, _ = k_cache.shape
+    assert hq % hkv == 0
+    groups = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, groups, d).astype(jnp.float32) * scale
+    kf = k_cache.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, kf)
+    k_pos = jnp.arange(skv)
+    mask = k_pos <= pos
+    if window > 0:
+        mask &= k_pos > pos - window
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def _window_mask(q_len: int, kv_len: int, *, causal: bool,
+                 window: int, q_offset: int) -> jax.Array:
+    """(q_len, kv_len) boolean mask.  ``window`` <= 0 means unbounded.
+    ``q_offset`` places the query block inside the full sequence (for
+    decode, q_offset = kv_len - q_len)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window and window > 0:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  q_offset: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Reference multi-head attention with GQA + sliding window.
+
+    q: (b, sq, hq, d); k, v: (b, skv, hkv, d) with hq % hkv == 0.
+    Softmax in fp32.  ``window`` is the sliding-attention width (tokens a
+    query may look back, itself included); 0 = full attention.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    groups = hq // hkv
+    if q_offset is None:
+        q_offset = skv - sq
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, groups, axis=2)
+    vf = jnp.repeat(vf, groups, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    mask = _window_mask(sq, skv, causal=causal, window=window,
+                        q_offset=q_offset)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Production serving driver: sharded batched decode.
+
+Builds the mesh + layout-engine shardings, places (randomly initialized
+or checkpointed) params, and serves batched generation requests through
+:class:`repro.serve.engine.DecodeEngine`.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --smoke --batch 4 --prompt-len 32 --steps 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import get_config, get_smoke_config
+from repro.dist import layout, sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.serve.engine import DecodeEngine
+
+
+def load_params(cfg, mesh, ckpt_dir=None, seed: int = 0,
+                int8: bool = False):
+    with shd.use_mesh(mesh):
+        struct = jax.eval_shape(
+            lambda: T.init_params(jax.random.PRNGKey(seed), cfg))
+        sh = layout.param_shardings(struct, cfg, mesh)
+        if ckpt_dir:
+            params = Checkpointer(ckpt_dir).restore(struct, shardings=sh)
+        else:
+            init = jax.jit(lambda k: T.init_params(k, cfg),
+                           out_shardings=sh)
+            params = init(jax.random.PRNGKey(seed))
+        if int8:                    # paper-precision serving mode
+            from repro import quant
+            before = quant.param_bytes(params)
+            params, n = quant.quantize_params(params)
+            print(f"[serve] int8-quantized {n} weight banks: "
+                  f"{before/2**20:.0f} -> "
+                  f"{quant.param_bytes(params)/2**20:.0f} MiB")
+        return params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--int8", action="store_true",
+                    help="weight-only int8 (the paper's precision)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke \
+        else get_config(args.arch)
+    mesh = make_host_mesh(data=len(jax.devices()))
+    params = load_params(cfg, mesh, args.ckpt_dir, int8=args.int8)
+    max_len = args.max_len or (args.prompt_len + args.steps)
+
+    rng = np.random.default_rng(0)
+    prompts = jax.numpy.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+        jax.numpy.int32)
+    frames = None
+    if cfg.family == "audio":
+        frames = jax.numpy.asarray(
+            rng.standard_normal(
+                (args.batch, cfg.encoder_seq, cfg.d_model),
+                dtype=np.float32), cfg.dtype)
+
+    with shd.use_mesh(mesh):
+        engine = DecodeEngine(params, cfg, batch=args.batch,
+                              max_len=max_len,
+                              temperature=args.temperature)
+        t0 = time.time()
+        result = engine.generate(prompts, args.steps, frames=frames)
+        dt = time.time() - t0
+    tok_s = args.batch * result.steps / dt
+    print(f"[serve] generated {result.steps} steps x {args.batch} seqs "
+          f"in {dt:.2f}s ({tok_s:.1f} tok/s)")
+    print("[serve] first sequence:", result.tokens[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Per-cell (arch × shape) dry-run problem construction.
+
+For each of the 40 assigned (architecture × input-shape) cells this
+builds the step function that cell lowers (``train_step`` for train
+shapes, ``prefill`` / ``decode_step`` for inference shapes), its inputs
+as ShapeDtypeStructs (no device allocation — the FULL configs are only
+ever touched this way), and the in/out sharding pytrees derived by the
+layout engine.  ``repro.launch.dryrun`` lowers + compiles these on the
+production meshes; benchmarks read the same problems for roofline terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, get_config
+from repro.data import pipeline
+from repro.dist import layout
+from repro.launch.shapes import SHAPES, ShapeSpec, skip_reason
+from repro.models import transformer as T
+from repro.runtime import elastic
+from repro.train import train_step as TS
+
+DRYRUN_LOSS_CHUNKS = 32     # (b, s/32, V) fp32 logits per xent chunk
+
+
+@dataclasses.dataclass
+class CellProblem:
+    """Everything dryrun needs to lower one cell."""
+
+    arch: str
+    shape: str
+    kind: str                       # train | prefill | decode
+    fn: Callable
+    args: Tuple[Any, ...]           # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    tokens: int                     # tokens processed per step (global)
+    training: bool
+    layout_name: str
+    static: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _logits_spec(mesh: Mesh, rows: int, vocab: int) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b_axes = layout._data_axes(mesh, rows)
+    v_ax = "model" if ("model" in sizes
+                       and vocab % sizes["model"] == 0) else None
+    return P(b_axes if b_axes else None, v_ax)
+
+
+def _replicated_like(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _state_struct(cfg: ModelConfig) -> TS.TrainState:
+    return jax.eval_shape(
+        lambda: TS.init_state(jax.random.PRNGKey(0), cfg))
+
+
+def _cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+
+def _train_problem(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                   layout_name: str) -> CellProblem:
+    data_cfg = pipeline.DataConfig(seq_len=shape.seq_len,
+                                   global_batch=shape.global_batch)
+    batch_struct = pipeline.batch_spec(cfg, data_cfg)
+    state_struct = _state_struct(cfg)
+
+    step = TS.make_train_step(cfg, n_loss_chunks=DRYRUN_LOSS_CHUNKS)
+
+    state_sh = elastic.state_shardings(state_struct, cfg, mesh,
+                                       layout_name)
+    batch_sh = _named(mesh, layout.batch_specs(batch_struct, mesh))
+    out_struct = jax.eval_shape(step, state_struct, batch_struct)
+    out_sh = (state_sh, _replicated_like(mesh, out_struct[1]))
+    return CellProblem(
+        arch=cfg.name, shape=shape.name, kind="train", fn=step,
+        args=(state_struct, batch_struct),
+        in_shardings=(state_sh, batch_sh), out_shardings=out_sh,
+        donate_argnums=(0,),
+        tokens=shape.global_batch * shape.seq_len, training=True,
+        layout_name=layout_name)
+
+
+def _prefill_problem(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                     layout_name: str) -> CellProblem:
+    b, s = shape.global_batch, shape.seq_len
+    data_cfg = pipeline.DataConfig(seq_len=s, global_batch=b)
+    batch_struct = pipeline.batch_spec(cfg, data_cfg)
+    batch_struct.pop("labels")
+    cache_struct = _cache_struct(cfg, b, s)
+    params_struct = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+    def fn(params, batch, cache):
+        return T.prefill(params, cfg, batch["tokens"], cache,
+                         prefix_embeds=batch.get("prefix_embeds"),
+                         frames=batch.get("frames"))
+
+    params_sh = _named(mesh, layout.param_specs(params_struct, cfg, mesh,
+                                                layout_name))
+    batch_sh = _named(mesh, layout.batch_specs(batch_struct, mesh))
+    cache_sh = _named(mesh, layout.cache_specs(cache_struct, mesh))
+    out_cache_struct = jax.eval_shape(fn, params_struct, batch_struct,
+                                      cache_struct)[1]
+    out_cache_sh = _named(mesh, layout.cache_specs(out_cache_struct,
+                                                   mesh))
+    logits_sh = NamedSharding(mesh, _logits_spec(mesh, b, cfg.vocab))
+    return CellProblem(
+        arch=cfg.name, shape=shape.name, kind="prefill", fn=fn,
+        args=(params_struct, batch_struct, cache_struct),
+        in_shardings=(params_sh, batch_sh, cache_sh),
+        out_shardings=(logits_sh, out_cache_sh),
+        donate_argnums=(2,),
+        tokens=b * s, training=False, layout_name=layout_name)
+
+
+def _decode_problem(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    layout_name: str) -> CellProblem:
+    b, s = shape.global_batch, shape.seq_len
+    cache_struct = _cache_struct(cfg, b, s)
+    params_struct = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    tok_struct = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    def fn(params, tok, cache):
+        return T.decode_step(params, cfg, tok, cache)
+
+    params_sh = _named(mesh, layout.param_specs(params_struct, cfg, mesh,
+                                                layout_name))
+    tok_sh = _named(mesh, layout.batch_specs(tok_struct, mesh))
+    cache_sh = _named(mesh, layout.cache_specs(cache_struct, mesh))
+    logits_sh = NamedSharding(mesh, _logits_spec(mesh, b, cfg.vocab))
+    return CellProblem(
+        arch=cfg.name, shape=shape.name, kind="decode", fn=fn,
+        args=(params_struct, tok_struct, cache_struct),
+        in_shardings=(params_sh, tok_sh, cache_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(2,),
+        tokens=b, training=False, layout_name=layout_name)
+
+
+def build_problem(arch: str, shape_name: str, mesh: Mesh,
+                  layout_name: Optional[str] = None) -> CellProblem:
+    """The (arch × shape) cell's lowering problem on ``mesh``.
+
+    Raises ``ValueError`` for cells the task sheet skips (long_500k on
+    pure full-attention archs) — callers record the reason instead.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = skip_reason(cfg, shape)
+    if skip is not None:
+        raise ValueError(f"cell skipped: {skip}")
+    layout_name = layout_name or layout.choose_layout(cfg)
+    builder = {"train": _train_problem, "prefill": _prefill_problem,
+               "decode": _decode_problem}[shape.kind]
+    return builder(cfg, shape, mesh, layout_name)
+
+
+def lower_problem(p: CellProblem):
+    """``jax.jit(...).lower(...)`` for a cell (call under ``use_mesh``)."""
+    jitted = jax.jit(p.fn, in_shardings=p.in_shardings,
+                     out_shardings=p.out_shardings,
+                     donate_argnums=p.donate_argnums)
+    return jitted.lower(*p.args)

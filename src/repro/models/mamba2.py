@@ -1,0 +1,233 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Implements the chunked, matmul-form SSD algorithm from arXiv:2405.21060:
+the sequence is split into chunks; within a chunk the output is a masked
+(attention-like) matmul, across chunks a small recurrent state
+(h, p, n) = (heads, head_dim, d_state) is carried.  This keeps the whole
+layer GEMM-dominated — which is exactly why the paper's tiled-GEMM
+methodology still applies to this attention-free architecture (see
+DESIGN.md SSArch-applicability).
+
+Decode is O(1): a single state update per token.
+
+Layout: d_inner = 2 * d_model, heads = d_inner / head_dim, one B/C group
+(G=1), scalar A per head (Mamba-2 simplification).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import _split, dense_init, init_rms_norm, rms_norm
+
+CONV_WIDTH = 4
+HEAD_DIM = 64
+
+
+def dims(d_model: int, d_state: int) -> dict:
+    d_inner = 2 * d_model
+    heads = d_inner // HEAD_DIM
+    return {"d_inner": d_inner, "heads": heads, "head_dim": HEAD_DIM,
+            "d_state": d_state,
+            # in_proj produces: z, x, B, C, dt
+            "proj_out": 2 * d_inner + 2 * d_state + heads}
+
+
+def init_mamba2(key, d_model: int, d_state: int, dtype) -> dict:
+    dd = dims(d_model, d_state)
+    k1, k2, k3, k4, k5 = _split(key, 5)
+    conv_channels = dd["d_inner"] + 2 * d_state      # x, B, C get conv'd
+    return {
+        "in_proj": dense_init(k1, d_model, dd["proj_out"], dtype),
+        "conv_w": (jax.random.normal(k2, (CONV_WIDTH, conv_channels),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_channels,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, dd["heads"],
+                                      dtype=jnp.float32)),
+        "d_skip": jnp.ones((dd["heads"],), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(jnp.linspace(1e-3, 0.1, dd["heads"],
+                                 dtype=jnp.float32)) - 1.0 + 1e-9),
+        "norm": init_rms_norm(dd["d_inner"]),
+        "out_proj": dense_init(k5, dd["d_inner"], d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: (b, s, ch); w: (W, ch).
+    ``state``: (b, W-1, ch) carry-in; returns (y, new state)."""
+    bsz, s, ch = x.shape
+    if state is None:
+        state = jnp.zeros((bsz, CONV_WIDTH - 1, ch), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + s, :] * w[i] for i in range(CONV_WIDTH))
+    y = jax.nn.silu((y + b).astype(jnp.float32)).astype(x.dtype)
+    return y, xp[:, -(CONV_WIDTH - 1):, :]
+
+
+def _split_proj(proj: jax.Array, d_model: int, d_state: int):
+    dd = dims(d_model, d_state)
+    di, h = dd["d_inner"], dd["heads"]
+    z = proj[..., :di]
+    x = proj[..., di:2 * di]
+    b_ = proj[..., 2 * di:2 * di + d_state]
+    c_ = proj[..., 2 * di + d_state:2 * di + 2 * d_state]
+    dt = proj[..., 2 * di + 2 * d_state:]
+    return z, x, b_, c_, dt
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Causal segment-sum: out[i, j] = sum_{j < l <= i} a[l] (lower-tri),
+    -inf above the diagonal.  a: (..., q)."""
+    q = a.shape[-1]
+    cums = jnp.cumsum(a, axis=-1)
+    diff = cums[..., :, None] - cums[..., None, :]  # sum_(j,i]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b_: jax.Array, c_: jax.Array, d_skip: jax.Array,
+                dt_bias: jax.Array, *, chunk: int = 128,
+                init_state: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (bsz, s, h, p); dt: (bsz, s, h); b_, c_: (bsz, s, n) single group.
+    Returns (y: (bsz, s, h, p), final_state: (bsz, h, p, n)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+        c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)      # (b,sp,h)
+    if pad:
+        # padded positions must neither decay the state (da=0) nor feed it
+        valid = (jnp.arange(sp) < s)[None, :, None]
+        dtf = jnp.where(valid, dtf, 0.0)
+    a = -jnp.exp(a_log)                                          # (h,)
+    da = dtf * a                                                  # log-decay
+    xb = (x.astype(jnp.float32) * dtf[..., None])                # dt-scaled
+
+    # reshape into chunks: (b, nc, q, ...)
+    def ch(t):
+        return t.reshape((bsz, nc, chunk) + t.shape[2:])
+    xc, dac, bc, cc = ch(xb), ch(da), ch(b_.astype(jnp.float32)), \
+        ch(c_.astype(jnp.float32))
+
+    # intra-chunk (diagonal) term: attention-like masked matmul
+    lmat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (b,nc,h,q,q)
+    scores = jnp.einsum("bzqn,bzkn->bzqk", cc, bc)      # (b,nc,q,q)
+    y_diag = jnp.einsum("bzhqk,bzqk,bzkhp->bzqhp", lmat, scores, xc)
+    # (k indexes source positions within the chunk)
+
+    # chunk-final states: sum_k decay_to_end(k) * B_k (x) x_k
+    cumsum_da = jnp.cumsum(dac, axis=2)                  # (b,nc,q,h)
+    decay_to_end = jnp.exp(cumsum_da[:, :, -1:, :] - cumsum_da)
+    states = jnp.einsum("bzkh,bzkn,bzkhp->bzhpn",
+                        decay_to_end, bc, xc)            # per-chunk state
+
+    # inter-chunk recurrence over nc (sequential scan, nc is small)
+    chunk_decay = jnp.exp(cumsum_da[:, :, -1, :])        # (b,nc,h)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        init_state = init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st_prev = carry
+        st_chunk, decay = inp
+        st_new = st_prev * decay[..., None, None] + st_chunk
+        return st_new, st_prev
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, init_state,
+        (states.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,nc,h,p,n)
+
+    # inter-chunk (off-diagonal) output: C_q . decay_from_start . h_prev
+    decay_from_start = jnp.exp(cumsum_da)                # (b,nc,q,h)
+    y_off = jnp.einsum("bzqn,bzqh,bzhpn->bzqhp",
+                       cc, decay_from_start, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, sp, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y[:, :s].astype(x.dtype), final_state
+
+
+def mamba2_block(params: dict, x: jax.Array, d_state: int,
+                 ) -> jax.Array:
+    """Full-sequence Mamba-2 mixer.  x: (b, s, d_model)."""
+    bsz, s, d_model = x.shape
+    dd = dims(d_model, d_state)
+    proj = ops.gemm(x, params["in_proj"])
+    z, xs, b_, c_, dt = _split_proj(proj, d_model, d_state)
+    conv_in = jnp.concatenate([xs, b_, c_], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xs = conv_out[..., :dd["d_inner"]]
+    b_ = conv_out[..., dd["d_inner"]:dd["d_inner"] + d_state]
+    c_ = conv_out[..., dd["d_inner"] + d_state:]
+    xh = xs.reshape(bsz, s, dd["heads"], dd["head_dim"])
+    y, _ = ssd_chunked(xh, dt, params["a_log"], b_, c_, params["d_skip"],
+                       params["dt_bias"])
+    y = y.reshape(bsz, s, dd["d_inner"])
+    y = rms_norm(params["norm"], y) \
+        * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return ops.gemm(y, params["out_proj"])
+
+
+def init_mamba2_cache(batch: int, d_model: int, d_state: int, dtype) -> dict:
+    dd = dims(d_model, d_state)
+    conv_ch = dd["d_inner"] + 2 * d_state
+    return {
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((batch, dd["heads"], dd["head_dim"], d_state),
+                         jnp.float32),
+    }
+
+
+def mamba2_decode(params: dict, x: jax.Array, cache: dict, d_state: int
+                  ) -> Tuple[jax.Array, dict]:
+    """Single-token step.  x: (b, 1, d_model)."""
+    bsz, s, d_model = x.shape
+    assert s == 1
+    dd = dims(d_model, d_state)
+    proj = ops.gemm(x, params["in_proj"])
+    z, xs, b_, c_, dt = _split_proj(proj, d_model, d_state)
+    conv_in = jnp.concatenate([xs, b_, c_], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"], cache["conv"])
+    xs = conv_out[..., :dd["d_inner"]]
+    b_ = conv_out[..., dd["d_inner"]:dd["d_inner"] + d_state]
+    c_ = conv_out[..., dd["d_inner"] + d_state:]
+
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"])           # (b, h)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dtf * a)                             # (b, h)
+    xh = xs[:, 0].reshape(bsz, dd["heads"], dd["head_dim"])
+    xb = xh.astype(jnp.float32) * dtf[..., None]
+    state = cache["ssd"] * decay[..., None, None] \
+        + jnp.einsum("bn,bhp->bhpn", b_[:, 0].astype(jnp.float32), xb)
+    y = jnp.einsum("bn,bhpn->bhp", c_[:, 0].astype(jnp.float32), state)
+    y = y + xh.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, dd["d_inner"]).astype(x.dtype)
+    y = rms_norm(params["norm"], y) \
+        * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = ops.gemm(y, params["out_proj"])
+    return out, {"conv": conv_state, "ssd": state}

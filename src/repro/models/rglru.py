@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t), r_t/i_t input-dependent
+sigmoid gates.  Training/prefill uses an associative scan over the
+sequence (log-depth); decode is a single state update.
+
+Block structure (Griffin residual block): in-proj to (branch, gate),
+short causal conv on the branch, RG-LRU, gated by gelu(gate), out-proj.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import _split, dense_init
+
+CONV_WIDTH = 4
+C_FACTOR = 8.0
+
+
+def init_rglru(key, d_model: int, lru_width: int, dtype) -> dict:
+    k1, k2, k3, k4, k5, k6 = _split(key, 6)
+    # Lambda init so a^c spans ~(0.9, 0.999) as in the paper
+    u = jax.random.uniform(k4, (lru_width,), jnp.float32,
+                           0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / C_FACTOR) - 1.0)
+    return {
+        "in_proj": dense_init(k1, d_model, 2 * lru_width, dtype),
+        "conv_w": (jax.random.normal(k2, (CONV_WIDTH, lru_width),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((lru_width,), dtype),
+        "w_r": dense_init(k3, lru_width, lru_width, dtype),
+        "w_i": dense_init(k5, lru_width, lru_width, dtype),
+        "lambda": lam,
+        "out_proj": dense_init(k6, lru_width, d_model, dtype),
+    }
+
+
+def _conv(x, w, b, state):
+    bsz, s, ch = x.shape
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + s, :] * w[i] for i in range(CONV_WIDTH))
+    return y + b, xp[:, -(CONV_WIDTH - 1):, :]
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(ops.gemm(x, params["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(ops.gemm(x, params["w_i"]).astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in log space for stability
+    gate_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, gate_x * i * x.astype(jnp.float32)
+
+
+def _lru_scan(a: jax.Array, bx: jax.Array, h0: jax.Array) -> jax.Array:
+    """Associative scan of h_t = a_t h_{t-1} + bx_t along axis 1.
+    a, bx: (b, s, w) fp32; h0: (b, w)."""
+    bx = bx.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_block(params: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence Griffin recurrent block.  x: (b, s, d_model)."""
+    bsz, s, _ = x.shape
+    lru_width = params["conv_b"].shape[0]
+    proj = ops.gemm(x, params["in_proj"])
+    branch, gate = jnp.split(proj, 2, axis=-1)
+    state0 = jnp.zeros((bsz, CONV_WIDTH - 1, lru_width), x.dtype)
+    branch, _ = _conv(branch, params["conv_w"], params["conv_b"], state0)
+    a, bx = _gates(params, branch)
+    h0 = jnp.zeros((bsz, lru_width), jnp.float32)
+    h = _lru_scan(a, bx, h0).astype(x.dtype)
+    h = h * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    return ops.gemm(h, params["out_proj"])
+
+
+def init_rglru_cache(batch: int, lru_width: int, dtype) -> dict:
+    return {"conv": jnp.zeros((batch, CONV_WIDTH - 1, lru_width), dtype),
+            "h": jnp.zeros((batch, lru_width), jnp.float32)}
+
+
+def rglru_decode(params: dict, x: jax.Array, cache: dict
+                 ) -> Tuple[jax.Array, dict]:
+    """Single-token step.  x: (b, 1, d_model)."""
+    proj = ops.gemm(x, params["in_proj"])
+    branch, gate = jnp.split(proj, 2, axis=-1)
+    branch, conv_state = _conv(branch, params["conv_w"], params["conv_b"],
+                               cache["conv"])
+    a, bx = _gates(params, branch)
+    h = a[:, 0] * cache["h"] + bx[:, 0]
+    y = h[:, None, :].astype(x.dtype) \
+        * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    return ops.gemm(y, params["out_proj"]), {"conv": conv_state, "h": h}

@@ -1,0 +1,98 @@
+"""Adafactor (factored second moments) — the >=235B-param optimizer.
+
+For a (r, c) matrix the second-moment estimate is stored as a length-r
+row statistic + length-c column statistic instead of r*c, so optimizer
+state for kimi-k2's 1T parameters is ~1/3500th of AdamW's.  Follows
+Shazeer & Stern 2018 (beta2 schedule, RMS update clipping); momentum-free.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: dict          # row stats  (matrices) / full stats (vectors)
+    vc: dict          # col stats  (matrices) / empty (vectors)
+
+
+EPS1 = 1e-30
+CLIP = 1.0
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params) -> AdafactorState:
+    def vr_init(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+            else jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr_init, params),
+                          vc=jax.tree.map(vc_init, params))
+
+
+def state_specs(param_specs, params) -> AdafactorState:
+    """PartitionSpec pytree mirroring :func:`init`: row stats drop the
+    param spec's last entry, col stats its second-to-last — so factored
+    moments stay sharded exactly like the dims they summarize (a 1T-param
+    model cannot afford replicated row/col stats)."""
+    from jax.sharding import PartitionSpec as P
+    is_spec = lambda x: isinstance(x, P)            # noqa: E731
+
+    def vr_spec(s, p):
+        return P(*s[:-1]) if _factored(p) else P(*s)
+
+    def vc_spec(s, p):
+        return P(*(tuple(s[:-2]) + (s[-1],))) if _factored(p) else P(None)
+
+    vr = jax.tree.map(vr_spec, param_specs, params, is_leaf=is_spec)
+    vc = jax.tree.map(vc_spec, param_specs, params, is_leaf=is_spec)
+    return AdafactorState(step=P(), vr=vr, vc=vc)
+
+
+def update(grads, state: AdafactorState, params, *,
+           lr: float | jax.Array, weight_decay: float = 0.0,
+           ) -> Tuple[dict, AdafactorState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8
+
+    def upd(g, vr, vc, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + EPS1
+        if _factored(p):
+            vr_new = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc_new = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr_new / jnp.maximum(
+                jnp.mean(vr_new, axis=-1, keepdims=True), EPS1)
+            u = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc_new)[..., None, :]
+                      + EPS1)
+        else:
+            vr_new = beta2 * vr + (1 - beta2) * g2
+            vc_new = vc
+            u = gf / (jnp.sqrt(vr_new) + EPS1)
+        # RMS clip
+        rms = jnp.sqrt(jnp.mean(u * u) + EPS1)
+        u = u / jnp.maximum(1.0, rms / CLIP)
+        if p.ndim >= 2 and weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), \
+            vr_new, vc_new
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    is_t = lambda x: isinstance(x, tuple)       # noqa: E731
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+    vr = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+    vc = jax.tree.map(lambda o: o[2], out, is_leaf=is_t)
+    return new_params, AdafactorState(step=step, vr=vr, vc=vc)

@@ -1,0 +1,67 @@
+"""AdamW with decoupled weight decay — plain-pytree implementation.
+
+States are fp32 regardless of param dtype (bf16-safe training); the
+optimizer state pytree mirrors the param tree, so whatever sharding the
+layout engine assigns to a parameter applies verbatim to its moments
+(ZeRO-style state sharding falls out of 2D weight sharding for free).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def init(params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def state_specs(param_specs, params) -> AdamWState:
+    """PartitionSpec pytree mirroring :func:`init` (moments inherit the
+    param spec verbatim)."""
+    from jax.sharding import PartitionSpec as P
+    is_spec = lambda x: isinstance(x, P)            # noqa: E731
+    copy = lambda: jax.tree.map(lambda s: s, param_specs,   # noqa: E731
+                                is_leaf=is_spec)
+    return AdamWState(step=P(), mu=copy(), nu=copy())
+
+
+def update(grads, state: AdamWState, params, *, lr: float | jax.Array,
+           b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.1) -> Tuple[dict, AdamWState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:                      # no decay on norms/biases
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m_new, v_new
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda o: o[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda o: o[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,83 @@
+"""Weight-only int8 quantization for serving — the paper's precision
+scheme as a first-class inference mode.
+
+The paper's entire evaluation is int8 GEMM (8-bit operands, 32-bit
+accumulation).  Training here stays bf16, but the serving path can load
+weights quantized to symmetric per-output-channel int8:
+:func:`quantize_params` rewrites every dense projection leaf into a
+``{"q": int8 (k,n), "scale": f32 (1,n)}`` struct, and
+``repro.kernels.ops.gemm`` consumes those structs transparently
+(dequantize-on-load into the GEMM's input dtype).  Weight HBM traffic —
+the dominant term of batched decode — halves vs bf16.
+
+Only leaves that flow through ``ops.gemm`` are rewritten (attention and
+MLP projections, SSM/RG-LRU projections, lm_head); embeddings (gather),
+MoE expert banks (batched einsum) and norms keep their dtype.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# leaves consumed via ops.gemm(x, w) with w: (k, n)
+QUANT_PATHS = re.compile(
+    r"(attn|cross)/w[qkvo]$|mlp/w_(gate|up|down|in|out)$"
+    r"|(mixer|rec)/(in|out)_proj$|rec/w_[ri]$|lm_head$")
+
+
+def is_quantized(leaf) -> bool:
+    return isinstance(leaf, dict) and set(leaf) == {"q", "scale"}
+
+
+def quantize_weight(w: jax.Array) -> dict:
+    """Symmetric per-output-channel (axis -2 = k reduced) int8."""
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def dequantize_weight(wq: dict, dtype) -> jax.Array:
+    return (wq["q"].astype(jnp.float32) * wq["scale"]).astype(dtype)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def quantize_params(params) -> Tuple[dict, int]:
+    """Quantize every GEMM weight leaf.  Returns (params', n_quantized).
+
+    Works on stacked (scan) leaves too — quantization is elementwise
+    over the trailing (k, n) dims with per-(…, n) scales.
+    """
+    count = 0
+
+    def one(path, leaf):
+        nonlocal count
+        ps = _path_str(path)
+        if QUANT_PATHS.search(ps) and leaf.ndim >= 2:
+            count += 1
+            return quantize_weight(leaf)
+        return leaf
+
+    out = jax.tree_util.tree_map_with_path(one, params)
+    return out, count
+
+
+def param_bytes(params) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

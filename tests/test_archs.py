@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (reduced configs, CPU).
+
+For every assigned architecture: one forward/train step asserting output
+shapes + no NaNs, and — the strong cache-correctness check — prefill +
+decode logits must match the full-sequence forward bit-for-bit-ish
+(float32 smoke configs, tol 1e-4).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import transformer as T
+
+BATCH, SEQ = 2, 32
+
+
+def _setup(arch):
+    cfg = get_smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    data = DataConfig(seq_len=SEQ + (cfg.prefix_tokens or 0),
+                      global_batch=BATCH, seed=1)
+    batch = make_batch(cfg, data, step=0)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg, params, batch = _setup(arch)
+    loss, metrics = T.loss_fn(params, cfg, batch, n_chunks=2)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    assert float(loss) > 0
+    h, aux = T.forward(params, cfg, batch["tokens"],
+                       prefix_embeds=batch.get("prefix_embeds"),
+                       frames=batch.get("frames"))
+    s_expect = batch["tokens"].shape[1] + (cfg.prefix_tokens or 0)
+    assert h.shape == (BATCH, s_expect, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_grads_finite(arch):
+    cfg, params, batch = _setup(arch)
+
+    def loss(p):
+        return T.loss_fn(p, cfg, batch, n_chunks=1)[0]
+
+    grads = jax.grad(loss)(params)
+    flat, _ = jax.tree.flatten(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in flat), arch
+    # at least one nonzero grad per major component
+    total = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in flat)
+    assert total > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if a != "internvl2-76b"])
+def test_prefill_plus_decode_matches_forward(arch):
+    """Cache correctness: logits(prefill(t[:-1]) -> decode(t[-1])) must
+    equal last-position logits of forward(t)."""
+    cfg, params, batch = _setup(arch)
+    tokens = batch["tokens"]
+    frames = batch.get("frames")
+
+    # ground truth: full forward
+    h, _ = T.forward(params, cfg, tokens, frames=frames, remat=False)
+    want = h[:, -1] @ params["lm_head"]
+
+    cache = T.init_cache(cfg, BATCH, max_len=SEQ + 8)
+    _, cache = T.prefill(params, cfg, tokens[:, :-1], cache, frames=frames)
+    got, cache = T.decode_step(params, cfg, tokens[:, -1:], cache)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+    assert int(cache["pos"]) == SEQ
+
+
+def test_vlm_prefix_loss_masks_prefix():
+    cfg, params, batch = _setup("internvl2-76b")
+    assert batch["prefix_embeds"].shape == (BATCH, cfg.prefix_tokens,
+                                            cfg.d_model)
+    loss, _ = T.loss_fn(params, cfg, batch, n_chunks=2)
+    assert np.isfinite(float(loss))
+
+
+def test_swa_ring_buffer_cache_is_bounded():
+    """h2o-danube (SWA): decode caches hold `window` slots, not seq_len —
+    the property that makes long_500k feasible."""
+    cfg = get_smoke_config("h2o-danube-3-4b")
+    cache = T.init_cache(cfg, batch=1, max_len=10_000)
+    k = cache["layers"]["u0"]["k"]
+    assert k.shape[2] == cfg.window  # (repeats, batch, window, ...)
+
+
+def test_swa_ring_decode_matches_full_cache():
+    """Windowed ring decode (cache = window slots) must equal decode with
+    an unbounded cache once past the window boundary."""
+    cfg = get_smoke_config("h2o-danube-3-4b")          # window = 32
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    total = 48                                          # crosses window
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, total), 0,
+                              cfg.vocab)
+    h, _ = T.forward(params, cfg, toks, remat=False)
+    want = h[:, -1] @ params["lm_head"]
+
+    cache = T.init_cache(cfg, 1, max_len=total)         # ring (win < total)
+    _, cache = T.prefill(params, cfg, toks[:, :-1], cache)
+    got, _ = T.decode_step(params, cfg, toks[:, -1:], cache)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_multi_step_decode_consistency():
+    """Decode N tokens one-by-one == forward of the whole sequence
+    (dense arch)."""
+    cfg = get_smoke_config("minitron-8b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    total = 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, total), 0,
+                              cfg.vocab)
+    h, _ = T.forward(params, cfg, toks, remat=False)
+    want = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+
+    cache = T.init_cache(cfg, 1, max_len=total + 4)
+    step = jax.jit(lambda tok, c: T.decode_step(params, cfg, tok, c))
+    for t in range(total):
+        got, cache = step(toks[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(want[:, t], np.float32),
+                                   rtol=2e-3, atol=2e-3, err_msg=f"t={t}")
+
+
+def test_param_counts_match_published_sizes():
+    """The config algebra must land near the published parameter counts
+    (the 6*N*D roofline depends on it)."""
+    expected = {
+        "minitron-8b": (8.0e9, 0.3),
+        "deepseek-67b": (67e9, 0.1),
+        "smollm-360m": (360e6, 0.3),
+        "h2o-danube-3-4b": (4.0e9, 0.3),
+        "kimi-k2-1t-a32b": (1.0e12, 0.1),
+        "qwen3-moe-235b-a22b": (235e9, 0.1),
+        "mamba2-370m": (370e6, 0.3),
+        "recurrentgemma-9b": (9.0e9, 0.3),
+        "internvl2-76b": (70e9, 0.15),     # LLM backbone of the 76B VLM
+    }
+    for arch, (want, tol) in expected.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < tol, (arch, got, want)
+
+
+def test_active_params_moe():
+    kimi = get_config("kimi-k2-1t-a32b")
+    active = kimi.param_count(active_only=True)
+    assert abs(active - 32e9) / 32e9 < 0.25, active
+    assert active < kimi.param_count() / 10

@@ -1,0 +1,67 @@
+"""End-to-end dry-run CLI smoke: one cell per step kind on a small
+debug mesh in a subprocess (fresh jax with forced device count)."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_cell(arch, shape, out):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["PYTHONPATH"] = "src"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", "single", "--debug-mesh", "2,4",
+           "--out", out]
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd=REPO, timeout=1200)
+    assert r.returncode == 0, r.stderr[-3000:]
+    rec = json.load(open(os.path.join(out, "single",
+                                      f"{arch}__{shape}.json")))
+    return rec
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm-360m", "train_4k"),          # train kind
+    ("smollm-360m", "decode_32k"),        # decode kind
+    ("mamba2-370m", "prefill_32k"),       # prefill kind, SSM family
+])
+def test_dryrun_cell(arch, shape):
+    with tempfile.TemporaryDirectory() as d:
+        rec = _run_cell(arch, shape, d)
+    assert rec["ok"]
+    r = rec["roofline"]
+    assert r["flops_per_device"] > 0
+    assert r["hbm_bytes_per_device"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert rec["memory_analysis"]["available"]
+    assert rec["memory_analysis"]["peak_bytes_per_device"] > 0
+    # loop correction engaged: scanned models must beat XLA's
+    # loops-counted-once number (decode has a large loop-external
+    # lm_head GEMM, so its ratio is smaller)
+    floor = 2.0 if shape == "train_4k" else 1.2
+    assert r["flops_per_device"] > floor * r["xla_flops_raw"]
+
+
+def test_dryrun_records_skip():
+    """long_500k on a pure full-attention arch is a documented skip."""
+    with tempfile.TemporaryDirectory() as d:
+        env = dict(os.environ)
+        env["REPRO_DRYRUN_DEVICES"] = "8"
+        env["PYTHONPATH"] = "src"
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--all",
+               "--mesh", "single", "--archs", "minitron-8b",
+               "--shapes", "long_500k", "--out", d]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           cwd=REPO, timeout=600)
+        assert r.returncode == 0, r.stderr[-2000:]
+        rec = json.load(open(os.path.join(
+            d, "single", "minitron-8b__long_500k.json")))
+    assert rec["ok"] and rec["skipped"]
+    assert "quadratic" in rec["skip_reason"]

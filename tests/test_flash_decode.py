@@ -1,0 +1,75 @@
+"""flash_decode Pallas kernel vs the pure-jnp oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ops import _decode_attention_xla
+from repro.kernels.ref import decode_attention_ref
+
+
+def _mk(b, skv, hq, hkv, d, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, skv, hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, skv, hkv, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("b,skv,hq,hkv,d", [
+    (1, 256, 4, 4, 64),       # MHA
+    (2, 512, 8, 2, 64),       # GQA groups=4
+    (1, 384, 16, 1, 128),     # MQA groups=16 (recurrentgemma shape)
+    (2, 1024, 8, 8, 96),      # non-128 head_dim (padded lanes)
+    (1, 200, 6, 2, 80),       # non-multiple skv (padded kv blocks)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matches_oracle(b, skv, hq, hkv, d, dtype):
+    q, k, v = _mk(b, skv, hq, hkv, d, dtype)
+    pos = jnp.asarray(skv - 1, jnp.int32)
+    want = decode_attention_ref(q, k, v, pos)
+    got = flash_decode(q, k, v, pos, bkv=128, interpret=True)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("pos", [0, 5, 130, 255])
+def test_position_masking(pos):
+    q, k, v = _mk(1, 256, 4, 2, 64, jnp.float32)
+    want = decode_attention_ref(q, k, v, jnp.asarray(pos, jnp.int32))
+    got = flash_decode(q, k, v, jnp.asarray(pos, jnp.int32), bkv=128,
+                       interpret=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    # sanity: masked positions must not leak — perturbing them is a no-op
+    k2 = k.at[:, pos + 1:].set(99.0)
+    v2 = v.at[:, pos + 1:].set(-99.0)
+    got2 = flash_decode(q, k2, v2, jnp.asarray(pos, jnp.int32), bkv=128,
+                        interpret=True)
+    np.testing.assert_allclose(got2, got, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_sliding_window(window):
+    q, k, v = _mk(1, 512, 8, 4, 64, jnp.float32, seed=3)
+    pos = jnp.asarray(400, jnp.int32)
+    want = decode_attention_ref(q, k, v, pos, window=window)
+    got = flash_decode(q, k, v, pos, window=window, bkv=128,
+                       interpret=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_xla_path_matches_oracle():
+    q, k, v = _mk(2, 512, 8, 2, 64, jnp.bfloat16)
+    pos = jnp.asarray(300, jnp.int32)
+    want = decode_attention_ref(q, k, v, pos, window=64)
+    got = _decode_attention_xla(q, k, v, pos, window=64)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=2e-2, rtol=2e-2)

@@ -1,0 +1,109 @@
+"""Layout engine: param specs, divisibility relaxation, cache specs,
+batch specs, multi-pod FSDP resolution."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.dist import layout
+from repro.models import transformer as T
+
+
+class FakeMesh:
+    """Duck-typed mesh (axis names + shape) for spec-level tests."""
+
+    def __init__(self, shape, names):
+        import numpy as np
+        self.devices = np.empty(shape, dtype=object)
+        self.axis_names = names
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH_POD = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_tp_specs_shard_ffn_and_vocab():
+    s = layout.spec_for("layers/u0/mlp/w_gate", (32, 4096, 16384), "tp",
+                        {"data": 16, "model": 16})
+    assert s == P(None, None, "model")
+    s = layout.spec_for("lm_head", (4096, 256000), "tp",
+                        {"data": 16, "model": 16})
+    assert s == P(None, "model")
+
+
+def test_divisibility_relaxation():
+    # projection dim not divisible by the 16-way model axis -> that dim
+    # relaxes to replicated while the divisible data dim stays sharded
+    s = layout.spec_for("layers/u0/attn/wq", (32, 960, 950), "fsdp_tp",
+                        {"data": 16, "model": 16})
+    assert s == P(None, "data", None)
+    # smollm's 960 = 60*16 divides: weights shard even with 15 heads
+    # (the replication cost shows up at the head reshape, not here)
+    s = layout.spec_for("layers/u0/attn/wq", (32, 960, 960), "fsdp_tp",
+                        {"data": 16, "model": 16})
+    assert s == P(None, "data", "model")
+
+
+def test_fsdp_resolves_pod_data_on_multipod():
+    s = layout.spec_for("layers/u0/mlp/w_gate", (61, 7168, 2048),
+                        "fsdp_tp", {"pod": 2, "data": 16, "model": 16})
+    assert s == P(None, ("pod", "data"), "model")
+    # and falls back to ('data',) when pod doesn't divide
+    s = layout.spec_for("layers/u0/mlp/w_gate", (61, 7168 + 16, 2048),
+                        "fsdp_tp", {"pod": 2, "data": 16, "model": 16})
+    assert s[1] is None or s[1] == "data" or s[1] == ("pod", "data")
+
+
+def test_choose_layout_by_size():
+    assert layout.choose_layout(get_config("smollm-360m")) == "tp"
+    assert layout.choose_layout(get_config("deepseek-67b")) == "fsdp_tp"
+    assert layout.choose_layout(get_config("kimi-k2-1t-a32b")) \
+        == "fsdp_tp"
+
+
+def test_param_specs_cover_tree():
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    params = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    specs = layout.param_specs(params, cfg, MESH, "tp")
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) == len(p.shape)   # full-rank specs
+
+
+def test_batch_specs_shard_rows():
+    tree = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    specs = layout.batch_specs(tree, MESH_POD)
+    assert specs["tokens"] == P(("pod", "data"), None)
+    # batch=1 (long_500k): replicate rather than fail
+    tree = {"tokens": jax.ShapeDtypeStruct((1, 16), jnp.int32)}
+    specs = layout.batch_specs(tree, MESH_POD)
+    assert specs["tokens"] == P(None, None)
+
+
+def test_cache_specs_shard_seq_over_model():
+    cfg = get_config("minitron-8b")
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 32768))
+    specs = layout.cache_specs(cache, MESH)
+    k_spec = specs["layers"]["u0"]["k"]
+    # (repeats, batch, seq, kv_heads, head_dim)
+    assert k_spec == P(None, "data", "model", None, None)
+    assert specs["pos"] == P()
+
+
+def test_cache_specs_tail_unstacked():
+    cfg = get_config("recurrentgemma-9b")
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 32768))
+    specs = layout.cache_specs(cache, MESH)
+    tail_kinds = cfg.tail_pattern
+    assert tail_kinds == ("rec", "rec")
+    conv = specs["tail"]["t0"]["conv"]
+    assert conv[0] == "data"             # batch at axis 0 for tail
+    # scanned local-attn cache still (repeats, batch, seq, ...)
+    k_spec = specs["layers"]["u2"]["k"]
+    assert k_spec[1] == "data" and k_spec[2] == "model"

@@ -1,0 +1,83 @@
+"""Weight-only int8 serving path: accuracy, size, end-to-end decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import quant
+from repro.configs.base import get_smoke_config
+from repro.kernels import ops
+from repro.models import transformer as T
+
+
+def test_quantize_weight_roundtrip_error():
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 64), jnp.float32)
+    wq = quant.quantize_weight(w)
+    back = quant.dequantize_weight(wq, jnp.float32)
+    # per-channel symmetric: elementwise error <= scale/2
+    assert float(jnp.max(jnp.abs(back - w) / wq["scale"])) <= 0.5 + 1e-6
+
+
+def test_gemm_accepts_quantized_struct():
+    a = jax.random.normal(jax.random.PRNGKey(1), (16, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32), jnp.float32)
+    want = ops.gemm(a, w)
+    got = ops.gemm(a, quant.quantize_weight(w))
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.02
+
+
+@pytest.mark.parametrize("arch", ["minitron-8b", "recurrentgemma-9b",
+                                  "mamba2-370m"])
+def test_quantized_decode_close_to_fp(arch):
+    cfg = get_smoke_config(arch)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    qparams, n = quant.quantize_params(params)
+    assert n > 0
+    assert quant.param_bytes(qparams) < 0.75 * quant.param_bytes(params)
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab)
+    cache_f = T.init_cache(cfg, 2, 24)
+    cache_q = T.init_cache(cfg, 2, 24)
+    lf, cache_f = T.prefill(params, cfg, toks, cache_f)
+    lq, cache_q = T.prefill(qparams, cfg, toks, cache_q)
+    # logits track closely; argmax agreement on most rows
+    rel = float(jnp.linalg.norm(lq - lf) / jnp.linalg.norm(lf))
+    assert rel < 0.1, (arch, rel)
+    tok = jnp.argmax(lq, -1)[:, None].astype(jnp.int32)
+    lq2, _ = T.decode_step(qparams, cfg, tok, cache_q)
+    assert bool(jnp.all(jnp.isfinite(lq2)))
+
+
+def test_layout_specs_survive_quantized_tree():
+    from repro.dist import layout
+    from tests.test_layout import MESH
+    from jax.sharding import PartitionSpec as P
+    cfg = get_smoke_config("minitron-8b")
+    params = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    qparams, _ = quant.quantize_params(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params))
+    specs = layout.param_specs(qparams, get_smoke_config("minitron-8b"),
+                               MESH, "tp")
+    flat_p = jax.tree.leaves(qparams)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) == len(p.shape)
+
+
+def test_bf16_reduce_flag_numerics(monkeypatch):
+    """REPRO_BF16_REDUCE=1 (the cross-shard bf16-reduction experiment)
+    must stay within bf16 tolerance of the fp32-accumulated path."""
+    monkeypatch.setenv("REPRO_BF16_REDUCE", "1")
+    a = jax.random.normal(jax.random.PRNGKey(3), (64, 256), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(4), (256, 32), jnp.bfloat16)
+    got = ops.gemm(a, w)
+    monkeypatch.delenv("REPRO_BF16_REDUCE")
+    want = ops.gemm(a, w)
+    rel = float(jnp.linalg.norm((got - want).astype(jnp.float32))
+                / jnp.linalg.norm(want.astype(jnp.float32)))
+    assert rel < 0.05
