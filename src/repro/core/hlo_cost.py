@@ -219,6 +219,10 @@ def multipliers(mod: Module) -> Dict[str, float]:
                             targets.append((b.strip().lstrip("%"), base))
                 else:
                     m = _ATTR_CALLS_RE.search(ins.line)
+                    if m is None and ins.opcode == "call":
+                        # some XLA versions wrap parallel fusions in
+                        # call(...) to_apply=%fusion_comp
+                        m = _ATTR_TO_APPLY_RE.search(ins.line)
                     if m:
                         targets.append((m.group(1), base))
                 for tname, tmult in targets:
@@ -449,7 +453,11 @@ def analyze_text(text: str) -> HloCost:
             if fusion_internal:
                 continue
             # ---- boundary bytes (non-fusion computations only)
-            if op in _FREE_OPS or op == "while" or op == "conditional":
+            # 'call' is structural: its callee's instructions are walked
+            # with the same multiplier (charging the call boundary too
+            # would bill a call-wrapped slicing fusion at full-operand
+            # size per loop iteration)
+            if op in _FREE_OPS or op in ("while", "conditional", "call"):
                 continue
             if op == "fusion":
                 b = m * _fusion_bytes(mod, ins)
@@ -509,3 +517,13 @@ def _group_size(line: str) -> int:
     if m:
         return len(m.group(1).split(","))
     return 1
+
+
+def xla_cost(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions
+    (older jax returns a per-computation list of dicts, newer a single
+    dict); always a dict, empty when the backend reports nothing."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

@@ -138,7 +138,7 @@ def analyze(compiled, *, chip: TPUChip = TPU_V5E, int8: bool = False,
             model_flops_per_device: Optional[float] = None,
             hlo_text: Optional[str] = None) -> RooflineReport:
     """Build the 3-term roofline from a compiled (SPMD) executable."""
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_cost.xla_cost(compiled)
     text = hlo_text if hlo_text is not None else compiled.as_text()
     parsed = hlo_cost.analyze_text(text)
     peak = chip.peak_int8_ops if int8 else chip.peak_bf16_flops

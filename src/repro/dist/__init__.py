@@ -1,0 +1,19 @@
+"""``repro.dist`` — the sharding + layout subsystem.
+
+Two layers, mirroring the paper's split between *mechanism* (how a GEMM
+is tiled onto an array) and *policy* (which tiling the DSE picks):
+
+* :mod:`repro.dist.sharding` — mechanism.  Mesh lifecycle
+  (``use_mesh`` / ``current_mesh``), the ``act`` activation-sharding
+  constraint (a no-op off-mesh, so the same model code runs on a laptop
+  CPU and a 512-chip pod), and version-tolerant wrappers over the jax
+  mesh / shard_map APIs.
+* :mod:`repro.dist.layout` — policy.  The name-pattern partition-spec
+  engine (``spec_for`` and the tree-level ``param_specs`` /
+  ``cache_specs`` / ``batch_specs``) plus ``choose_layout``, the
+  mesh-scale analogue of the paper's Table III/IV tile search: score
+  candidate strategies by per-device bytes + collective traffic, pick
+  the cheapest feasible one.
+"""
+
+from repro.dist import layout, sharding  # noqa: F401

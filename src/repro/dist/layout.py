@@ -1,0 +1,330 @@
+"""Name-pattern partition-spec engine + layout DSE (the *policy* half of
+``repro.dist``).
+
+The paper picks one GEMM tiling per architecture by exhaustively scoring
+the design space against a memory model (Tables III/IV); this module is
+the same methodology one level up the hierarchy: for a whole model on a
+whole mesh, enumerate the candidate *sharding strategies*, score each by
+per-device bytes + collective traffic, and emit the concrete
+``PartitionSpec`` for every parameter / cache / batch leaf under the
+winner.
+
+Strategies (over mesh axes ``('pod',) 'data', 'model'``):
+
+* ``dp``      — pure data parallel: params replicated.
+* ``tp``      — Megatron-style tensor parallel over ``'model'``:
+  column-parallel projections shard their output dim, row-parallel
+  their input dim; MoE expert banks shard the expert dim (EP).
+* ``fsdp``    — parameters sharded over the batch-like axes
+  (``('pod', 'data')``), gathered per layer.
+* ``fsdp_tp`` — both: ``tp`` sharding over ``'model'`` plus FSDP of
+  what remains over ``('pod', 'data')``.
+
+Every placement is divisibility-checked: a dim that does not divide its
+mesh axes **relaxes to replicated** instead of erroring, so published
+odd shapes (a 950-wide projection on a 16-way axis) and tiny smoke
+configs flow through the same engine (tests/test_layout.py pins this).
+
+Specs are *full-rank* (one entry per dim) and derived from parameter
+*names*, so they survive structural rewrites of the leaves — notably
+the int8 ``{"q", "scale"}`` structs from :mod:`repro.quant`, which
+inherit the parent weight's placement (the per-channel scale relaxes
+on its broadcast dim automatically).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding
+
+STRATEGIES = ("dp", "tp", "fsdp", "fsdp_tp")
+
+# ---------------------------------------------------------------------------
+# Name patterns -> trailing-dim roles
+#
+# Roles name the *parallelism direction* of each trailing dim; leading
+# (stacked scan / vmap) dims are always replicated.  'fsdp' dims shard
+# over the batch-like axes, 'tp' dims over 'model', 'expert' dims over
+# 'model' (expert parallelism), 'rep' dims stay replicated.
+# ---------------------------------------------------------------------------
+
+_PATTERNS: Tuple[Tuple[re.Pattern, Tuple[str, ...]], ...] = tuple(
+    (re.compile(pat), roles) for pat, roles in (
+        (r"moe/router$", ("rep", "rep")),
+        (r"moe/w_(gate|up)$", ("expert", "fsdp", "tp")),
+        (r"moe/w_down$", ("expert", "tp", "fsdp")),
+        (r"(attn|cross)/w[qkv]$", ("fsdp", "tp")),      # column-parallel
+        (r"(attn|cross)/wo$", ("tp", "fsdp")),          # row-parallel
+        (r"mlp/w_(gate|up|in)$", ("fsdp", "tp")),
+        (r"mlp/w_(down|out)$", ("tp", "fsdp")),
+        (r"(mixer|rec)/in_proj$", ("fsdp", "tp")),
+        (r"(mixer|rec)/out_proj$", ("tp", "fsdp")),
+        (r"rec/w_[ri]$", ("fsdp", "tp")),
+        (r"lm_head$", ("fsdp", "tp")),
+        (r"embed$", ("fsdp", "tp")),
+    ))
+
+#: quantized-struct leaf names that inherit the parent weight's pattern
+_QUANT_SUFFIX = re.compile(r"/(q|scale)$")
+
+#: role resolution priority — 'expert' claims 'model' before 'tp' can
+_ROLE_ORDER = ("expert", "tp", "fsdp")
+
+
+def _prod(xs) -> int:
+    return int(math.prod(xs)) if xs else 1
+
+
+def _fsdp_candidates(axis_sizes: Dict[str, int]) -> Tuple[Tuple[str, ...], ...]:
+    """Batch-like axis combinations to try for an 'fsdp' dim, widest
+    first: ('pod','data') -> ('data',) -> ('pod',)."""
+    present = tuple(a for a in sharding.DATA_AXES if a in axis_sizes)
+    cands = []
+    if len(present) > 1:
+        cands.append(present)
+    for a in reversed(present):
+        cands.append((a,))
+    return tuple(cands)
+
+
+def _axis_for_role(role: str, dim: int, strategy: str,
+                   axis_sizes: Dict[str, int], used: set):
+    """Mesh axis (or axes tuple) for one (role, dim) under ``strategy``,
+    or None (inactive role / no divisible placement)."""
+    if role in ("rep", None) or strategy == "dp":
+        return None
+    if role == "expert" or (role == "tp" and strategy in ("tp", "fsdp_tp")):
+        m = axis_sizes.get("model", 1)
+        if "model" not in used and m > 0 and dim % m == 0 \
+                and "model" in axis_sizes:
+            return "model"
+        return None
+    if role == "fsdp" and strategy in ("fsdp", "fsdp_tp"):
+        for cand in _fsdp_candidates(axis_sizes):
+            if any(a in used for a in cand):
+                continue
+            if dim % _prod([axis_sizes[a] for a in cand]) == 0:
+                return cand if len(cand) > 1 else cand[0]
+        return None
+    return None
+
+
+def spec_for(name: str, shape: Sequence[int], strategy: str,
+             axis_sizes: Dict[str, int]) -> P:
+    """Full-rank PartitionSpec for one named parameter leaf.
+
+    ``name`` is the '/'-joined tree path (e.g. ``layers/u0/attn/wq`` or
+    the quantized ``layers/u0/attn/wq/q``); ``axis_sizes`` maps mesh
+    axis names to sizes.  Unknown names are replicated.
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(
+            f"unknown layout strategy {strategy!r}; want one of "
+            f"{STRATEGIES}")
+    base = _QUANT_SUFFIX.sub("", name)
+    roles: Optional[Tuple[str, ...]] = None
+    for pat, r in _PATTERNS:
+        if pat.search(base):
+            roles = r
+            break
+    rank = len(shape)
+    entries: list = [None] * rank
+    if roles is None:
+        return P(*entries)
+    roles = roles[-rank:]
+    offset = rank - len(roles)
+    used: set = set()
+    for want in _ROLE_ORDER:
+        for i, role in enumerate(roles):
+            if role != want:
+                continue
+            ax = _axis_for_role(role, int(shape[offset + i]), strategy,
+                                axis_sizes, used)
+            if ax is not None:
+                entries[offset + i] = ax
+                used.update(ax if isinstance(ax, tuple) else (ax,))
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level spec derivation
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, cfg, mesh, strategy: Optional[str] = None):
+    """PartitionSpec pytree mirroring ``params`` (full-rank leaves).
+
+    ``mesh`` only contributes axis names/sizes, so duck-typed meshes
+    work; ``strategy`` defaults to :func:`choose_layout` scored against
+    *this* mesh's axes.
+    """
+    sizes = sharding.axis_sizes(mesh)
+    strategy = strategy or choose_layout(cfg, sizes)
+
+    def one(path, leaf):
+        return spec_for(_path_str(path), leaf.shape, strategy, sizes)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, cfg, mesh, strategy: Optional[str] = None):
+    """NamedShardings for ``params`` on a *concrete* mesh."""
+    specs = param_specs(params, cfg, mesh, strategy)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _data_axes(mesh, rows: int):
+    """Batch-like mesh axes that divide ``rows`` (see
+    :func:`repro.dist.sharding.data_axes_for`)."""
+    return sharding.data_axes_for(int(rows), sharding.axis_sizes(mesh))
+
+
+def batch_specs(batch, mesh):
+    """Row-shard every batch leaf over the batch-like axes (dim 0); all
+    other dims replicated.  Rows that don't divide (batch=1 long-context
+    cells) replicate rather than fail."""
+
+    def one(leaf):
+        rank = len(leaf.shape)
+        if rank == 0:
+            return P()
+        return P(_data_axes(mesh, int(leaf.shape[0])),
+                 *([None] * (rank - 1)))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cache, mesh):
+    """Decode/prefill cache specs.
+
+    Scanned caches under ``layers``/``cross`` are stacked
+    ``(repeats, batch, ...)`` — batch at dim 1; unstacked ``tail``
+    caches carry batch at dim 0.  KV tensors additionally shard their
+    sequence dim over ``'model'`` (sequence-sharded cache reads are the
+    decode-side analogue of the paper's operand-reuse tiling: each
+    device keeps 1/|model| of the window resident).  Everything else
+    (ring positions, conv states, SSM states) shards batch only.
+    """
+    sizes = sharding.axis_sizes(mesh)
+    model_ok = "model" in sizes
+
+    def one(path, leaf):
+        rank = len(leaf.shape)
+        if rank == 0:
+            return P()
+        keys = [str(p.key) for p in path
+                if isinstance(p, jax.tree_util.DictKey)]
+        stacked = bool(keys) and keys[0] in ("layers", "cross")
+        bdim = 1 if stacked and rank >= 2 else 0
+        entries: list = [None] * rank
+        entries[bdim] = _data_axes(mesh, int(leaf.shape[bdim]))
+        sdim = bdim + 1
+        if keys and keys[-1] in ("k", "v") and sdim < rank and model_ok \
+                and int(leaf.shape[sdim]) % sizes["model"] == 0:
+            entries[sdim] = "model"
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# Layout DSE — choose_layout
+# ---------------------------------------------------------------------------
+
+#: per-collective latency/launch overhead, expressed in byte-equivalents
+#: (what ~1 ms of ICI time moves); penalizes FSDP's per-layer gathers
+#: for models small enough that replication is free
+LATENCY_EQUIV_BYTES = 32 * 2 ** 20
+
+#: HBM feasibility headroom — fragmentation + temp buffers
+HBM_FIT_FRACTION = 0.9
+
+#: optimizer switch mirrors repro.train.train_step.ADAFACTOR_THRESHOLD
+#: (not imported: layout must stay import-cycle-free below the models)
+_ADAFACTOR_THRESHOLD = 100e9
+
+_DEFAULT_AXES = {"data": 16, "model": 16}       # production single pod
+
+
+def _train_bytes_per_param(cfg) -> float:
+    """bf16 params + fp32 grads + optimizer state (AdamW m,v fp32; the
+    >=100B regime uses Adafactor whose factored stats are ~free)."""
+    opt = 8.0 if cfg.param_count() < _ADAFACTOR_THRESHOLD else 0.5
+    return 2.0 + 4.0 + opt
+
+
+def score_layouts(cfg, axis_sizes: Optional[Dict[str, int]] = None, *,
+                  hbm_bytes: Optional[int] = None) -> Dict[str, dict]:
+    """Score every strategy for ``cfg`` on a mesh of ``axis_sizes``.
+
+    The cost model (the Table III/IV analogue): per-device resident
+    bytes, param-collective wire bytes per step, and a per-collective
+    latency charge.  Returns ``{strategy: {mem_bytes_per_device,
+    collective_bytes_per_device, n_collectives, feasible, score}}``.
+    """
+    sizes = dict(axis_sizes or _DEFAULT_AXES)
+    model = max(1, sizes.get("model", 1))
+    dataprod = _prod([sizes[a] for a in sharding.DATA_AXES if a in sizes])
+    dataprod = max(1, dataprod)
+    if hbm_bytes is None:
+        from repro.core.hardware import TPU_V5E
+        hbm_bytes = TPU_V5E.hbm_bytes
+
+    n_params = cfg.param_count()
+    train_bytes = n_params * _train_bytes_per_param(cfg)
+    grad_wire = 2.0 * n_params                  # bf16 grads on the wire
+    n_layers = cfg.n_layers
+
+    shard_factor = {"dp": 1, "tp": model, "fsdp": dataprod,
+                    "fsdp_tp": dataprod * model}
+    # (wire bytes per device per step, collective count per step):
+    # dp/tp sync grads once; fsdp adds per-layer gathers fwd+bwd plus
+    # the grad reduce-scatter (~3x param wire bytes, 3L+1 launches)
+    collectives = {
+        "dp": (2.0 * grad_wire, 1),
+        "tp": (2.0 * grad_wire / model, 1),
+        "fsdp": (3.0 * grad_wire, 3 * n_layers + 1),
+        "fsdp_tp": (3.0 * grad_wire / model, 3 * n_layers + 1),
+    }
+    out = {}
+    for s in STRATEGIES:
+        mem = train_bytes / shard_factor[s]
+        wire, n_coll = collectives[s]
+        out[s] = {
+            "mem_bytes_per_device": mem,
+            "collective_bytes_per_device": wire,
+            "n_collectives": n_coll,
+            "feasible": mem <= HBM_FIT_FRACTION * hbm_bytes,
+            "score": mem + wire + n_coll * LATENCY_EQUIV_BYTES,
+        }
+    return out
+
+
+def choose_layout(cfg, axis_sizes: Optional[Dict[str, int]] = None, *,
+                  hbm_bytes: Optional[int] = None) -> str:
+    """Cheapest feasible strategy for ``cfg``; when nothing fits (the
+    1T-param tier even at full sharding) fall back to the min-memory
+    strategy so the dry-run still characterizes the closest layout."""
+    scored = score_layouts(cfg, axis_sizes, hbm_bytes=hbm_bytes)
+    feasible = {s: v for s, v in scored.items() if v["feasible"]}
+    if feasible:
+        return min(feasible, key=lambda s: feasible[s]["score"])
+    return min(scored, key=lambda s: scored[s]["mem_bytes_per_device"])

@@ -1,3 +1,18 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+"""Pallas-TPU version compat.
+
+The TPU compiler-params dataclass was renamed across jax releases
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); resolve
+whichever the pinned toolchain ships so every kernel builds on both.
+"""
+
+
+def _compiler_params(**kwargs):
+    """``pltpu.CompilerParams(**kwargs)`` under either name."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

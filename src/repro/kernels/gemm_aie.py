@@ -22,6 +22,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.tiling import TileConfig
+from repro.kernels import _compiler_params
 
 
 def _acc_dtype(in_dtype) -> jnp.dtype:
@@ -71,7 +72,7 @@ def gemm_aie(a: jax.Array, b: jax.Array, *, tile: TileConfig,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), acc)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.tiling import TileConfig
+from repro.kernels import _compiler_params
 
 
 def _acc_dtype(in_dtype) -> jnp.dtype:
@@ -57,7 +58,7 @@ def _tb_call(a, b, c, *, bm: int, bn: int, interpret: bool):
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
         input_output_aliases={2: 0},                      # C updated in place
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, c)

@@ -38,15 +38,13 @@ Usage:
 
 
 def _mesh_for(mode: str, debug_shape: Optional[str]):
-    import jax
+    from repro.dist import sharding as shd
     from repro.launch.mesh import make_production_mesh
     if debug_shape:
         dims = tuple(int(x) for x in debug_shape.split(","))
         names = {2: ("data", "model"),
                  3: ("pod", "data", "model")}[len(dims)]
-        return jax.make_mesh(
-            dims, names,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        return shd.make_mesh(dims, names)
     return make_production_mesh(multi_pod=(mode == "multi"))
 
 
@@ -93,7 +91,7 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
              layout_name: Optional[str] = None) -> dict:
     import jax
     from repro.configs.base import get_config
-    from repro.core import roofline
+    from repro.core import hlo_cost, roofline
     from repro.core.hardware import TPU_V5E
     from repro.dist import sharding as shd
     from repro.launch import specs
@@ -129,7 +127,7 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
     rec["arg_bytes_per_device"] = _shard_bytes(p.args, p.in_shardings)
     rec["hbm_per_device"] = TPU_V5E.hbm_bytes
 
-    cost = compiled.cost_analysis() or {}
+    cost = hlo_cost.xla_cost(compiled)
     rec["cost_analysis"] = {
         "flops": float(cost.get("flops", 0.0)),
         "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
@@ -141,7 +139,6 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
         compiled, model_flops_per_device=model_flops / n_devices,
         hlo_text=hlo_text)
     rec["roofline"] = report.as_dict()
-    from repro.core import hlo_cost
     parsed = hlo_cost.analyze_text(hlo_text)
     rec["bytes_by_scope"] = {k: round(v) for k, v
                              in parsed.bytes_by_scope.items()}

@@ -171,7 +171,8 @@ def build_problem(arch: str, shape_name: str, mesh: Mesh,
     skip = skip_reason(cfg, shape)
     if skip is not None:
         raise ValueError(f"cell skipped: {skip}")
-    layout_name = layout_name or layout.choose_layout(cfg)
+    layout_name = layout_name or layout.choose_layout(
+        cfg, dict(zip(mesh.axis_names, mesh.devices.shape)))
     builder = {"train": _train_problem, "prefill": _prefill_problem,
                "decode": _decode_problem}[shape.kind]
     return builder(cfg, shape, mesh, layout_name)

@@ -16,8 +16,7 @@ import jax, jax.numpy as jnp
 from repro.dist import sharding as shd
 import repro.models.moe as M
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = shd.make_mesh((2, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)
 E, d, f, k = 8, 32, 64, 2
 p = M.init_moe(key, d, f, E, jnp.float32)

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="optional dev dep (pip install "
+                    "-e .[dev]); skip property tests without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dse, hlo_cost
 from repro.core.hardware import TPU_V5E
