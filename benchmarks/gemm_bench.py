@@ -16,7 +16,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tiling import TileConfig
+from repro import quant
+from repro.core import dse
+from repro.core.bandwidth import estimate
+from repro.core.hardware import TPU_V5E
+from repro.core.tiling import GemmProblem, TileConfig
 from repro.kernels import ops, ref
 
 
@@ -48,6 +52,7 @@ def run(report) -> None:
                vs_xla=f"{t_gemm/t_dot:.2f}x", ok=ok)
 
     # Pallas kernels, interpret mode, small shape: parity + timing
+    prev_mode = os.environ.get("REPRO_KERNELS")
     os.environ["REPRO_KERNELS"] = "interpret"
     try:
         tile = TileConfig(64, 128, 128, "aie")
@@ -65,7 +70,10 @@ def run(report) -> None:
         report.row("gemm", "pallas-tb  128x256x128 interpret",
                    max_abs_err=f"{err_tb:.3e}", ok=err_tb < 1e-1)
     finally:
-        os.environ.pop("REPRO_KERNELS", None)
+        if prev_mode is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = prev_mode
 
     # int8 quantized path (the paper's precision scheme)
     aq, ascale = ops.quantize_int8(a[:256, :256])          # (m,1) rows
@@ -76,6 +84,43 @@ def run(report) -> None:
     rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
     report.row("gemm", "int8 quantized 256x256x256",
                rel_err=f"{rel:.3f}", ok=rel < 0.05)
+
+    # W8A16: fused int8-weight kernels (interpret parity) + the modeled
+    # HBM traffic the per-operand DSE claims vs bf16 weights for a
+    # decode-shaped GEMM (m=16 batch, k=n=4096)
+    prev_mode = os.environ.get("REPRO_KERNELS")
+    os.environ["REPRO_KERNELS"] = "interpret"
+    try:
+        wq = quant.quantize_weight(b[:256, :128].astype(jnp.float32))
+        x = a[:64, :256]
+        want = ref.gemm_ref(x, quant.dequantize_weight(wq, jnp.bfloat16),
+                            out_dtype=jnp.float32)
+        for strat in ("aie", "tb"):
+            got = ops.gemm(x, wq, strategy=strat,
+                           tile=TileConfig(64, 128, 128, strat),
+                           out_dtype=jnp.float32)
+            rel = float(jnp.linalg.norm(got - want)
+                        / jnp.linalg.norm(want))
+            report.row("gemm", f"w8a16 fused-{strat} 64x256x128",
+                       rel_err=f"{rel:.4f}", ok=rel < 5e-3)
+    finally:
+        if prev_mode is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = prev_mode
+
+    m_dec, k_dec, n_dec = 16, 4096, 4096
+    p16 = GemmProblem(m_dec, k_dec, n_dec, "bfloat16", "bfloat16")
+    p8 = GemmProblem(m_dec, k_dec, n_dec, "bfloat16", "bfloat16",
+                     "float32", "int8")
+    d16 = dse.solve(p16, top=1)[0]
+    d8 = dse.solve(p8, top=1)[0]
+    hbm16 = estimate(d16.tile, p16, TPU_V5E).hbm_bytes
+    hbm8 = estimate(d8.tile, p8, TPU_V5E).hbm_bytes
+    report.row("gemm", f"w8a16 modeled HBM {m_dec}x{k_dec}x{n_dec}",
+               bf16_mib=f"{hbm16/2**20:.1f}",
+               int8_mib=f"{hbm8/2**20:.1f}",
+               ratio=f"{hbm8/hbm16:.2f}", ok=hbm8 <= 0.6 * hbm16)
 
 
 if __name__ == "__main__":

@@ -21,15 +21,25 @@ from repro.kernels import ops
 
 def main() -> None:
     # -- 1. tiling DSE ------------------------------------------------
-    p = GemmProblem(m=8192, k=4096, n=4096, in_dtype="bfloat16")
+    p = GemmProblem(m=8192, k=4096, n=4096, a_dtype="bfloat16")
     designs = dse.solve(p, top=3)
-    print(f"GEMM {p.m}x{p.k}x{p.n} ({p.in_dtype}) — top designs:")
+    print(f"GEMM {p.m}x{p.k}x{p.n} ({p.a_dtype}) — top designs:")
     for d in designs:
         t = d.tile
         print(f"  {t.strategy:3s} block {t.bm}x{t.bk}x{t.bn}  "
               f"VMEM {d.vmem_bytes/2**20:5.1f} MiB  "
               f"AI {d.traffic.arithmetic_intensity:6.0f}  "
               f"bound={d.traffic.bound}")
+
+    # mixed precision is per-operand: a decode-shaped W8A16 GEMM bills
+    # the int8 weight stream at one byte/element (+ scale vector)
+    dec16 = GemmProblem(16, 4096, 4096, "bfloat16", "bfloat16")
+    dec8 = GemmProblem(16, 4096, 4096, "bfloat16", "bfloat16",
+                       "float32", b_dtype="int8")
+    h16 = dse.solve(dec16, top=1)[0].traffic.hbm_bytes
+    h8 = dse.solve(dec8, top=1)[0].traffic.hbm_bytes
+    print(f"decode 16x4096x4096 modeled HBM: bf16 {h16/2**20:.1f} MiB "
+          f"-> W8A16 {h8/2**20:.1f} MiB ({h8/h16:.0%})")
 
     # -- 2. the kernel API --------------------------------------------
     key = jax.random.PRNGKey(0)

@@ -45,27 +45,42 @@ def hbm_traffic_bytes(tile: TileConfig, p: GemmProblem) -> float:
     * ``tb`` (A-stationary, grid m,k,n): A is read once; B re-read per
       m-block row; C is read+written once per k step (PL-accumulator
       pattern).
+
+    Operands are billed at their *own* dtype widths (A at a-bytes, B at
+    b-bytes — the per-operand-precision accounting the Versal follow-up
+    uses for its energy model), and quantized int8 operands additionally
+    move their fp32 scale vectors: a (1, n) per-output-channel vector
+    rides with every B panel read, a (m, 1) per-row vector with every A
+    panel read.
     """
     gm, gn, gk = tile.grid(p)
     pm_, pk, pn = tile.padded_dims(p)
-    in_b = dtype_bytes(p.in_dtype)
+    a_b = dtype_bytes(p.a_dtype)
+    b_b = dtype_bytes(p.b_dtype)
     out_b = dtype_bytes(p.out_dtype)
     acc_b = dtype_bytes(p.acc_dtype)
-    a_bytes = pm_ * pk * in_b
-    b_bytes = pk * pn * in_b
+    a_bytes = pm_ * pk * a_b
+    b_bytes = pk * pn * b_b
     c_bytes = pm_ * pn * out_b
+    a_scale = pm_ * 4 if p.a_dtype == "int8" else 0
+    b_scale = pn * 4 if p.b_dtype == "int8" else 0
     if tile.strategy == "aie":
-        return a_bytes * gn + b_bytes * gm + c_bytes
+        return ((a_bytes + a_scale) * gn + (b_bytes + b_scale) * gm
+                + c_bytes)
     # 'tb'
     c_rmw = pm_ * pn * acc_b
-    return a_bytes + b_bytes * gm + c_rmw * (2 * gk - 1) + c_bytes
+    return (a_bytes + a_scale) + (b_bytes + b_scale) * gm \
+        + c_rmw * (2 * gk - 1) + c_bytes
 
 
 def estimate(tile: TileConfig, p: GemmProblem, chip: TPUChip = TPU_V5E
              ) -> TrafficEstimate:
     pm_, pk, pn = tile.padded_dims(p)
     flops = 2.0 * pm_ * pk * pn
-    peak = chip.peak_int8_ops if dtype_bytes(p.in_dtype) == 1 \
+    # int8 MXU rate needs *both* operands at 8 bits; W8A16 dequantizes
+    # in-register and multiplies at the bf16 rate.
+    peak = chip.peak_int8_ops \
+        if dtype_bytes(p.a_dtype) == 1 and dtype_bytes(p.b_dtype) == 1 \
         else chip.peak_bf16_flops
     hbm = hbm_traffic_bytes(tile, p)
     return TrafficEstimate(

@@ -80,15 +80,19 @@ def _lane_candidates(dim: int) -> Sequence[int]:
 
 
 @functools.lru_cache(maxsize=4096)
-def _solve_cached(m: int, k: int, n: int, in_dtype: str, out_dtype: str,
-                  acc_dtype: str, chip_name: str, budget_fraction: float,
-                  top: int) -> Tuple["TileDesign", ...]:
+def _solve_cached(m: int, k: int, n: int, a_dtype: str, b_dtype: str,
+                  out_dtype: str, acc_dtype: str, chip_name: str,
+                  budget_fraction: float, top: int
+                  ) -> Tuple["TileDesign", ...]:
     assert chip_name == TPU_V5E.name, "single-target build"
     chip = TPU_V5E
-    p = GemmProblem(m, k, n, in_dtype, out_dtype, acc_dtype)
+    p = GemmProblem(m, k, n, a_dtype, out_dtype, acc_dtype, b_dtype)
     designs: List[TileDesign] = []
     for strategy in STRATEGIES:
-        for bm in _m_candidates(m, in_dtype, chip):
+        # sublane minima are per-operand: bm follows A's dtype; B's
+        # (bk, bn) block is billed at b_dtype inside fits_vmem, which is
+        # what admits ~2x bigger bk for int8 weight streams.
+        for bm in _m_candidates(m, a_dtype, chip):
             for bk in _lane_candidates(k):
                 for bn in _lane_candidates(n):
                     tile = TileConfig(bm, bk, bn, strategy)
@@ -113,16 +117,23 @@ def solve(p: GemmProblem, chip: TPUChip = TPU_V5E,
           budget_fraction: float = 0.75, top: int = 10
           ) -> List[TileDesign]:
     """Ranked tiling designs for a GEMM problem."""
-    return list(_solve_cached(p.m, p.k, p.n, p.in_dtype, p.out_dtype,
-                              p.acc_dtype, chip.name, budget_fraction, top))
+    return list(_solve_cached(p.m, p.k, p.n, p.a_dtype, p.b_dtype,
+                              p.out_dtype, p.acc_dtype, chip.name,
+                              budget_fraction, top))
 
 
 def best_tile(m: int, k: int, n: int, in_dtype: str = "bfloat16",
               out_dtype: str = "bfloat16", acc_dtype: str = "float32",
-              strategy: Optional[str] = None) -> TileConfig:
+              strategy: Optional[str] = None, *,
+              b_dtype: Optional[str] = None) -> TileConfig:
     """The DSE winner (optionally restricted to one strategy) — what
-    ``repro.kernels.ops.gemm`` uses when no tile is given."""
-    p = GemmProblem(m, k, n, in_dtype, out_dtype, acc_dtype)
+    ``repro.kernels.ops.gemm`` uses when no tile is given.
+
+    ``in_dtype`` is A's dtype; pass ``b_dtype="int8"`` for the fused
+    quantized-weight path (W8A16 / W8A8) so the search bills B at one
+    byte/element.
+    """
+    p = GemmProblem(m, k, n, in_dtype, out_dtype, acc_dtype, b_dtype)
     for d in solve(p):
         if strategy is None or d.tile.strategy == strategy:
             return d.tile

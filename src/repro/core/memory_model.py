@@ -44,10 +44,12 @@ class VmemFootprint:
     b_bytes: int
     out_bytes: int
     acc_bytes: int
+    scale_bytes: int = 0          # fused-dequant fp32 scale vector blocks
 
     @property
     def total(self) -> int:
-        return self.a_bytes + self.b_bytes + self.out_bytes + self.acc_bytes
+        return (self.a_bytes + self.b_bytes + self.out_bytes
+                + self.acc_bytes + self.scale_bytes)
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self) | {"total": self.total}
@@ -62,17 +64,27 @@ def vmem_footprint(tile: TileConfig, p: GemmProblem,
       block streams.
     * ``tb`` (A-stationary): the A block is resident (single copy); B and
       the read-modify-written C stream (x pipeline stages each way).
+
+    A and B are billed at *their own* dtype widths — an int8 B block costs
+    one byte/element, which is exactly what lets the DSE roughly double
+    the feasible ``bk`` for W8A16 GEMMs.  A quantized B additionally
+    streams a (1, bn) fp32 per-output-channel scale block.
     """
-    a = padded_tile_bytes(tile.bm, tile.bk, p.in_dtype, chip)
-    b = padded_tile_bytes(tile.bk, tile.bn, p.in_dtype, chip)
+    a = padded_tile_bytes(tile.bm, tile.bk, p.a_dtype, chip)
+    b = padded_tile_bytes(tile.bk, tile.bn, p.b_dtype, chip)
     o = padded_tile_bytes(tile.bm, tile.bn, p.out_dtype, chip)
     acc = padded_tile_bytes(tile.bm, tile.bn, p.acc_dtype, chip)
+    scale = 0
+    if p.b_dtype == "int8":
+        scale = PIPELINE_STAGES * padded_tile_bytes(1, tile.bn, "float32",
+                                                    chip)
     if tile.strategy == "aie":
         return VmemFootprint(
             a_bytes=PIPELINE_STAGES * a,
             b_bytes=PIPELINE_STAGES * b,
             out_bytes=PIPELINE_STAGES * o,
             acc_bytes=acc,
+            scale_bytes=scale,
         )
     # 'tb': A resident; C is both input and output stream (read-modify-
     # write accumulation in the output buffer, like the paper's PL adders).
@@ -82,6 +94,7 @@ def vmem_footprint(tile: TileConfig, p: GemmProblem,
         out_bytes=2 * PIPELINE_STAGES * padded_tile_bytes(
             tile.bm, tile.bn, p.acc_dtype, chip),
         acc_bytes=0,
+        scale_bytes=scale,
     )
 
 
@@ -89,11 +102,11 @@ def vmem_efficiency(tile: TileConfig, p: GemmProblem,
                     chip: TPUChip = TPU_V5E) -> float:
     """Logical bytes / physical (padded) bytes — the paper's RAM
     *efficiency* metric carried to VMEM tiles."""
-    logical = (tile.bm * tile.bk + tile.bk * tile.bn) \
-        * dtype_bytes(p.in_dtype) + tile.bm * tile.bn \
-        * dtype_bytes(p.out_dtype)
-    a = padded_tile_bytes(tile.bm, tile.bk, p.in_dtype, chip)
-    b = padded_tile_bytes(tile.bk, tile.bn, p.in_dtype, chip)
+    logical = tile.bm * tile.bk * dtype_bytes(p.a_dtype) \
+        + tile.bk * tile.bn * dtype_bytes(p.b_dtype) \
+        + tile.bm * tile.bn * dtype_bytes(p.out_dtype)
+    a = padded_tile_bytes(tile.bm, tile.bk, p.a_dtype, chip)
+    b = padded_tile_bytes(tile.bk, tile.bn, p.b_dtype, chip)
     o = padded_tile_bytes(tile.bm, tile.bn, p.out_dtype, chip)
     return logical / (a + b + o)
 

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -56,23 +56,54 @@ def cdiv(a: int, b: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class GemmProblem:
-    """A logical (M, K, N) GEMM with operand/accumulator dtypes."""
+    """A logical (M, K, N) GEMM with *per-operand* dtypes.
+
+    Mixed precision is first-class: ``a_dtype`` is the activation stream,
+    ``b_dtype`` the weight stream (the paper's int8 operands — and the
+    W8A16 GEMM batched decode wants — bill B at one byte/element while A
+    stays bf16).  ``b_dtype=None`` means "same as A", which keeps every
+    uniform-precision call site unchanged, and ``in_dtype`` survives as a
+    read-only compat property.  Quantized int8 operands carry fp32 scale
+    vectors (per-row for A, per-output-channel for B) that the traffic
+    model bills alongside the operand.
+    """
 
     m: int
     k: int
     n: int
-    in_dtype: str = "bfloat16"
+    a_dtype: str = "bfloat16"
     out_dtype: str = "bfloat16"
     acc_dtype: str = "float32"
+    b_dtype: Optional[str] = None
+
+    def __post_init__(self):
+        if self.b_dtype is None:
+            object.__setattr__(self, "b_dtype", self.a_dtype)
+
+    @property
+    def in_dtype(self) -> str:
+        """Compat alias for the pre-mixed-precision API (A's dtype)."""
+        return self.a_dtype
+
+    @property
+    def mixed(self) -> bool:
+        return self.a_dtype != self.b_dtype
 
     @property
     def flops(self) -> float:
         return 2.0 * self.m * self.k * self.n
 
     @property
+    def a_bytes(self) -> int:
+        return self.m * self.k * dtype_bytes(self.a_dtype)
+
+    @property
+    def b_bytes(self) -> int:
+        return self.k * self.n * dtype_bytes(self.b_dtype)
+
+    @property
     def in_bytes(self) -> int:
-        b = dtype_bytes(self.in_dtype)
-        return (self.m * self.k + self.k * self.n) * b
+        return self.a_bytes + self.b_bytes
 
     @property
     def out_bytes(self) -> int:

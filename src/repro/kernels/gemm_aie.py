@@ -15,6 +15,7 @@ the way the paper's U,V,W come from its IP solver.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,14 +45,44 @@ def _gemm_aie_kernel(a_ref, b_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _gemm_aie_fused_kernel(a_ref, b_ref, s_ref, o_ref, acc_ref):
+    """Fused-dequant body: int8 B blocks arrive in VMEM at one
+    byte/element; the per-output-channel scale is applied once, on the
+    final-k flush (the paper's 8-bit-operand / 32-bit-accumulate scheme
+    when A is also int8; f32 accumulation of in-register-dequantized B
+    for W8A16)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if b.dtype != a.dtype:          # W8A16: in-register int8 -> a-dtype
+        b = b.astype(a.dtype)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * s_ref[...]).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("tile", "out_dtype",
                                              "interpret"))
 def gemm_aie(a: jax.Array, b: jax.Array, *, tile: TileConfig,
-             out_dtype=None, interpret: bool = False) -> jax.Array:
+             out_dtype=None, b_scale: Optional[jax.Array] = None,
+             interpret: bool = False) -> jax.Array:
     """C[m,n] = sum_k A[m,k] B[k,n], output-stationary.
 
     Dims must be multiples of the tile (ops.py pads — the paper's
     zero-padding alignment, SS V-C2).
+
+    ``b_scale`` (1, n) fp32 turns on the fused weight-dequant path: ``b``
+    must then be int8, streamed into VMEM at one byte/element, and
+    ``C[m,n] = b_scale[n] * sum_k A[m,k] Bq[k,n]`` with the scale applied
+    on the last-k flush (int32 accumulation when A is int8 too).
     """
     m, k = a.shape
     k2, n = b.shape
@@ -60,14 +91,34 @@ def gemm_aie(a: jax.Array, b: jax.Array, *, tile: TileConfig,
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
         (a.shape, b.shape, tile)
     acc = _acc_dtype(a.dtype)
-    out_dtype = out_dtype or acc
     grid = (m // bm, n // bn, k // bk)
+    if b_scale is None:
+        out_dtype = out_dtype or acc
+        return pl.pallas_call(
+            _gemm_aie_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+                pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), acc)],
+            compiler_params=_compiler_params(
+                dimension_semantics=("parallel", "parallel",
+                                     "arbitrary")),
+            interpret=interpret,
+        )(a, b)
+    assert b.dtype == jnp.int8, b.dtype
+    assert b_scale.shape == (1, n), (b_scale.shape, n)
+    out_dtype = out_dtype or jnp.float32
     return pl.pallas_call(
-        _gemm_aie_kernel,
+        _gemm_aie_fused_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
             pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
@@ -75,4 +126,4 @@ def gemm_aie(a: jax.Array, b: jax.Array, *, tile: TileConfig,
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(a, b)
+    )(a, b, b_scale.astype(jnp.float32))

@@ -23,6 +23,7 @@ is why the DSE searches both.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +40,14 @@ def _acc_dtype(in_dtype) -> jnp.dtype:
 
 def _gemm_tb_kernel(a_ref, b_ref, c_ref, o_ref):
     # One (m,n) visit: accumulate this k-chunk's contribution onto C.
-    o_ref[...] = c_ref[...] + jnp.dot(a_ref[...], b_ref[...],
+    # A quantized B stream arrives as int8 (one byte/element in VMEM) and
+    # is dequantized in-register to A's dtype; per-output-channel scales
+    # commute with the k-sum, so they are applied once after the cascade
+    # (gemm_tb), like the paper's outward-cascaded TB accumulation.
+    b = b_ref[...]
+    if b.dtype != a_ref.dtype:
+        b = b.astype(a_ref.dtype)
+    o_ref[...] = c_ref[...] + jnp.dot(a_ref[...], b,
                                       preferred_element_type=o_ref.dtype)
 
 
@@ -67,21 +75,34 @@ def _tb_call(a, b, c, *, bm: int, bn: int, interpret: bool):
 @functools.partial(jax.jit, static_argnames=("tile", "out_dtype",
                                              "interpret"))
 def gemm_tb(a: jax.Array, b: jax.Array, *, tile: TileConfig,
-            out_dtype=None, interpret: bool = False) -> jax.Array:
+            out_dtype=None, b_scale: Optional[jax.Array] = None,
+            interpret: bool = False) -> jax.Array:
     """C[m,n] = sum_k A[m,k] B[k,n], A-stationary with k-chunked
-    PL-style accumulation.  Dims must be tile multiples (ops.py pads)."""
+    PL-style accumulation.  Dims must be tile multiples (ops.py pads).
+
+    ``b_scale`` (1, n) fp32 turns on the fused weight-dequant path:
+    ``b`` must then be int8 (streamed at one byte/element, dequantized
+    in-register inside the kernel body for W8A16; int32 accumulation
+    when A is int8 too) and the per-output-channel scale is applied once
+    after the last k-chunk cascade.
+    """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     bm, bk, bn = tile.bm, tile.bk, tile.bn
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
         (a.shape, b.shape, tile)
+    if b_scale is not None:
+        assert b.dtype == jnp.int8, b.dtype
+        assert b_scale.shape == (1, n), (b_scale.shape, n)
     acc = _acc_dtype(a.dtype)
-    out_dtype = out_dtype or acc
+    out_dtype = out_dtype or (jnp.float32 if b_scale is not None else acc)
     gk = k // bk
     c = jnp.zeros((m, n), acc)
     for kk in range(gk):            # k-chunk loop = the paper's V loop
         a_k = jax.lax.slice(a, (0, kk * bk), (m, (kk + 1) * bk))
         b_k = jax.lax.slice(b, (kk * bk, 0), ((kk + 1) * bk, n))
         c = _tb_call(a_k, b_k, c, bm=bm, bn=bn, interpret=interpret)
+    if b_scale is not None:
+        c = c.astype(jnp.float32) * b_scale.astype(jnp.float32)
     return c.astype(out_dtype)

@@ -11,6 +11,11 @@ Dispatch policy (the hardware-adaptation contract):
 
 ``gemm`` carries a custom VJP (dA = dC Bᵀ, dB = Aᵀ dC, both routed back
 through ``gemm``) so the Pallas forward is trainable.
+
+Quantized ``{"q", "scale"}`` weight structs route to the *fused* kernels
+(int8 B streamed at one byte/element, dequantized in-register — never
+pre-dequantized on the forward path); their custom VJP dequantizes only
+in the backward, so serving stays forward-only at 1-byte weight traffic.
 """
 
 from __future__ import annotations
@@ -21,7 +26,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import quant as _quant
 from repro.core import dse
 from repro.core.tiling import TileConfig, round_up
 from repro.kernels import ref as _ref
@@ -98,6 +105,69 @@ def _gemm2d_bwd(strategy, tile, out_dtype, res, g):
 _gemm2d.defvjp(_gemm2d_fwd, _gemm2d_bwd)
 
 
+def _gemm_q_pallas(a: jax.Array, q: jax.Array, scale: jax.Array,
+                   tile: TileConfig, out_dtype) -> jax.Array:
+    """Pad + run a fused weight-dequant Pallas kernel (b_scale path)."""
+    m, k = a.shape
+    _, n = q.shape
+    bm = min(tile.bm, round_up(m, 8))
+    bk = min(tile.bk, round_up(k, 128))
+    bn = min(tile.bn, round_up(n, 128))
+    tile = TileConfig(bm, bk, bn, tile.strategy)
+    np_ = round_up(n, bn)
+    ap = _pad2(a, round_up(m, bm), round_up(k, bk))
+    qp = _pad2(q, round_up(k, bk), np_)
+    sp = scale if np_ == n else jnp.pad(
+        scale, ((0, 0), (0, np_ - n)), constant_values=1.0)
+    fn = gemm_aie if tile.strategy == "aie" else gemm_tb
+    out = fn(ap, qp, tile=tile, out_dtype=out_dtype,
+             b_scale=sp.astype(jnp.float32), interpret=_interpret())
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _gemm2d_q(a: jax.Array, q: jax.Array, scale: jax.Array,
+              strategy: Optional[str], tile: Optional[TileConfig],
+              out_dtype) -> jax.Array:
+    """C = A @ (q * scale) without materializing the dequantized weight:
+    the kernel streams int8 q and applies the per-output-channel scale
+    to the accumulator."""
+    if use_pallas():
+        t = tile
+        if t is None:
+            (m, k), n = a.shape, q.shape[1]
+            acc = "int32" if a.dtype == jnp.int8 else "float32"
+            t = dse.best_tile(m, k, n, str(a.dtype),
+                              str(jnp.dtype(out_dtype)), acc,
+                              strategy=strategy, b_dtype="int8")
+        return _gemm_q_pallas(a, q, scale, t, out_dtype)
+    return _ref.gemm_fused_ref(a, q, scale, out_dtype=out_dtype)
+
+
+def _gemm2d_q_fwd(a, q, scale, strategy, tile, out_dtype):
+    return _gemm2d_q(a, q, scale, strategy, tile, out_dtype), \
+        (a, q, scale)
+
+
+def _gemm2d_q_bwd(strategy, tile, out_dtype, res, g):
+    # The ONLY place the weight is dequantized — the forward path never
+    # pays 2-byte weight traffic.  Quantized weights are serving
+    # artifacts: they get no gradient (int8 cotangent is float0).
+    a, q, scale = res
+    if a.dtype == jnp.int8:
+        da = np.zeros(a.shape, jax.dtypes.float0)
+    else:
+        w = (q.astype(jnp.float32) * scale).astype(a.dtype)
+        da = _gemm2d(g.astype(a.dtype), w.T, strategy, None,
+                     a.dtype).astype(a.dtype)
+    dq = np.zeros(q.shape, jax.dtypes.float0)
+    dscale = jnp.zeros_like(scale)
+    return da, dq, dscale
+
+
+_gemm2d_q.defvjp(_gemm2d_q_fwd, _gemm2d_q_bwd)
+
+
 def gemm(a: jax.Array, b, *, strategy: Optional[str] = None,
          tile: Optional[TileConfig] = None,
          out_dtype=None) -> jax.Array:
@@ -106,12 +176,28 @@ def gemm(a: jax.Array, b, *, strategy: Optional[str] = None,
 
     ``b`` may be a weight-only int8 struct ``{"q", "scale"}`` from
     ``repro.quant`` (the paper's int8 precision as a serving mode) —
-    dequantized on load into ``a``'s dtype, so weight HBM traffic is one
-    byte/element.
+    routed to the fused kernels, which stream the int8 block at one
+    byte/element and dequantize in-register (W8A16).  Under
+    ``quant.activation_mode() == "w8a8"`` the activations are
+    additionally quantized per-row on the fly and the kernel runs
+    int8 x int8 with int32 accumulation (forward-only).
     """
-    if isinstance(b, dict) and {"q", "scale"} <= set(b):
-        b = (b["q"].astype(jnp.float32) * b["scale"]).astype(a.dtype)
     out_dtype = out_dtype or a.dtype
+    if isinstance(b, dict) and {"q", "scale"} <= set(b):
+        n = b["q"].shape[-1]
+        lead = a.shape[:-1]
+        a2 = a.reshape((-1, a.shape[-1]))
+        if _quant.activation_mode() == "w8a8" \
+                and a2.dtype != jnp.int8:
+            a_q, a_s = _quant.quantize_activations(
+                jax.lax.stop_gradient(a2), axis=-1)
+            acc = _gemm2d_q(a_q, b["q"], b["scale"], strategy, tile,
+                            jnp.dtype(jnp.float32))
+            out = (acc * a_s).astype(out_dtype)
+        else:
+            out = _gemm2d_q(a2, b["q"], b["scale"], strategy, tile,
+                            jnp.dtype(out_dtype)).astype(out_dtype)
+        return out.reshape(lead + (n,))
     lead = a.shape[:-1]
     a2 = a.reshape((-1, a.shape[-1]))
     out = _gemm2d(a2, b, strategy, tile, jnp.dtype(out_dtype))
@@ -125,7 +211,10 @@ def gemm_int8(a_q, b_q, a_scale, b_scale, *, out_dtype=jnp.float32,
     if use_pallas():
         m, k = a_q.shape
         _, n = b_q.shape
-        t = tile or dse.best_tile(m, k, n, "int8", "int8", "int32")
+        # int32 OUTPUT: the kernel writes the int32 accumulator, so the
+        # DSE must bill C at 4 bytes (an "int8" out under-billed C
+        # traffic 4x and could pick tiles that bust VMEM).
+        t = tile or dse.best_tile(m, k, n, "int8", "int32", "int32")
         acc = _gemm_pallas(a_q, b_q, t, jnp.int32)
     else:
         acc = jnp.dot(a_q, b_q, preferred_element_type=jnp.int32)

@@ -54,6 +54,22 @@ def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+def gemm_fused_ref(a: jax.Array, b_q: jax.Array, b_scale: jax.Array,
+                   *, out_dtype=None) -> jax.Array:
+    """Oracle for the fused weight-dequant kernels: B stays int8 through
+    the dot, the per-output-channel fp32 scale is applied once to the
+    accumulator (W8A16: f32 accumulation; W8A8: int8 operands, int32
+    accumulation — the paper's scheme).  b_scale: (1, n)."""
+    if a.dtype == jnp.int8:
+        acc = jnp.dot(a, b_q, preferred_element_type=jnp.int32)
+        out = acc.astype(jnp.float32) * b_scale
+    else:
+        acc = jnp.dot(a.astype(jnp.float32), b_q.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        out = acc * b_scale
+    return out.astype(out_dtype or jnp.float32)
+
+
 def gemm_int8_ref(a_q: jax.Array, b_q: jax.Array,
                   a_scale: jax.Array, b_scale: jax.Array,
                   out_dtype=jnp.float32) -> jax.Array:

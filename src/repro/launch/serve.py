@@ -57,8 +57,16 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--int8", action="store_true",
-                    help="weight-only int8 (the paper's precision)")
+                    help="fused int8 weights, bf16 activations (W8A16)")
+    ap.add_argument("--w8a8", action="store_true",
+                    help="int8 weights + dynamic int8 activations "
+                         "(the paper's int8 x int8 / int32-accumulate "
+                         "scheme); implies --int8")
     args = ap.parse_args()
+    if args.w8a8:
+        args.int8 = True
+        from repro import quant
+        quant.set_activation_mode("w8a8")
 
     cfg = get_smoke_config(args.arch) if args.smoke \
         else get_config(args.arch)
@@ -81,6 +89,13 @@ def main() -> None:
         engine = DecodeEngine(params, cfg, batch=args.batch,
                               max_len=max_len,
                               temperature=args.temperature)
+        bpt = engine.modeled_bytes_per_token()
+        mode = "w8a8" if args.w8a8 else \
+            ("w8a16" if args.int8 else "bf16")
+        print(f"[serve] {mode}: modeled GEMM weight stream "
+              f"{bpt / 2**20:.1f} MiB/step "
+              f"({bpt / args.batch / 2**20:.2f} MiB per seq-token "
+              f"at batch {args.batch})")
         t0 = time.time()
         result = engine.generate(prompts, args.steps, frames=frames)
         dt = time.time() - t0

@@ -1,14 +1,26 @@
-"""Weight-only int8 quantization for serving — the paper's precision
-scheme as a first-class inference mode.
+"""Int8 quantization for serving — the paper's precision scheme as a
+first-class inference mode.
 
 The paper's entire evaluation is int8 GEMM (8-bit operands, 32-bit
 accumulation).  Training here stays bf16, but the serving path can load
 weights quantized to symmetric per-output-channel int8:
 :func:`quantize_params` rewrites every dense projection leaf into a
 ``{"q": int8 (k,n), "scale": f32 (1,n)}`` struct, and
-``repro.kernels.ops.gemm`` consumes those structs transparently
-(dequantize-on-load into the GEMM's input dtype).  Weight HBM traffic —
-the dominant term of batched decode — halves vs bf16.
+``repro.kernels.ops.gemm`` consumes those structs through the *fused*
+Pallas path: the int8 block streams into VMEM at one byte/element and is
+dequantized in-register inside the kernel body, so weight HBM traffic —
+the dominant term of batched decode — halves vs bf16 (W8A16).
+
+Two serving modes:
+
+* **W8A16** (default with quantized params): bf16 activations against
+  in-register-dequantized int8 weights, f32 accumulation.
+* **W8A8** (:func:`set_activation_mode`, or ``REPRO_W8A8=1``):
+  activations are dynamically quantized per-row to int8 at each GEMM, the
+  kernel runs int8 x int8 with int32 accumulation and applies the weight
+  scale on flush — the paper's exact scheme — and the per-row activation
+  scale is applied outside.  Decode-oriented: the w8a8 path is
+  forward-only (no gradient through the activation quantizer).
 
 Only leaves that flow through ``ops.gemm`` are rewritten (attention and
 MLP projections, SSM/RG-LRU projections, lm_head); embeddings (gather),
@@ -17,6 +29,7 @@ MoE expert banks (batched einsum) and norms keep their dtype.
 
 from __future__ import annotations
 
+import os
 import re
 from typing import Tuple
 
@@ -81,3 +94,65 @@ def param_bytes(params) -> int:
     for leaf in jax.tree.leaves(params):
         total += leaf.size * leaf.dtype.itemsize
     return total
+
+
+def gemm_weight_bytes(params) -> int:
+    """HBM bytes of the GEMM-consumed weight stream — the modeled
+    weight traffic of ONE batched decode step (every projection leaf is
+    read once per step; quantized leaves bill q at one byte/element plus
+    their fp32 scale vector)."""
+    total = 0
+
+    def one(path, leaf):
+        nonlocal total
+        if is_quantized(leaf):
+            total += leaf["q"].size * leaf["q"].dtype.itemsize
+            total += leaf["scale"].size * leaf["scale"].dtype.itemsize
+        elif QUANT_PATHS.search(_path_str(path)) \
+                and getattr(leaf, "ndim", 0) >= 2:
+            total += leaf.size * leaf.dtype.itemsize
+        return leaf
+
+    jax.tree_util.tree_map_with_path(one, params, is_leaf=is_quantized)
+    return total
+
+
+# --------------------------------------------------------------- W8A8
+# Dynamic activation quantization mode for decode.  ops.gemm consults
+# this at trace time when it receives a quantized weight struct.
+
+_ACTIVATION_MODES = ("none", "w8a8")
+_activation_mode = "none"
+
+
+def set_activation_mode(mode: str) -> None:
+    """Select the serving activation precision: "none" (W8A16 against
+    quantized weights) or "w8a8" (dynamic per-row int8 activations,
+    int8 x int8 GEMM, int32 accumulation)."""
+    global _activation_mode
+    if mode not in _ACTIVATION_MODES:
+        raise ValueError(f"unknown activation mode {mode!r}")
+    _activation_mode = mode
+
+
+def activation_mode() -> str:
+    """Active mode; the ``REPRO_W8A8`` env var, when set, overrides the
+    programmatic setter (tests, ad-hoc CLI runs).  Values are strict —
+    junk like ``REPRO_W8A8=false`` raises instead of silently enabling
+    or disabling quantization."""
+    env = os.environ.get("REPRO_W8A8")
+    if env is None:
+        return _activation_mode
+    if env in ("1", "true", "w8a8"):
+        return "w8a8"
+    if env in ("", "0", "false", "none"):
+        return "none"
+    raise ValueError(f"REPRO_W8A8={env!r}: use 1/0")
+
+
+def quantize_activations(x: jax.Array, axis: int = -1):
+    """Symmetric dynamic per-row int8 activation quantization ->
+    (q, scale); the W8A8 front half (the weight half is pre-quantized by
+    :func:`quantize_params`)."""
+    from repro.kernels import ref as _ref
+    return _ref.quantize_int8(x, axis=axis)

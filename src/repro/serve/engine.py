@@ -26,6 +26,15 @@ class GenerationResult:
     steps: int
 
 
+# EOS completion is checked on the host only every this-many steps:
+# a per-token ``bool(jnp.all(done))`` would force a device->host sync
+# every decode step and serialize the jitted step stream.  Generated
+# tokens and ``done`` both stay on device between checks; the trade is
+# up to EOS_CHECK_EVERY-1 extra (masked-out) steps after the last
+# sequence finishes.
+EOS_CHECK_EVERY = 8
+
+
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
                  max_len: int, temperature: float = 0.0,
@@ -58,17 +67,27 @@ class DecodeEngine:
         cache = T.init_cache(self.cfg, b, self.max_len)
         logits, cache = self._prefill(self.params, prompts, cache, frames)
         key = jax.random.PRNGKey(seed)
-        out = []
+        out = []                  # device-resident (b,) token slices
         done = jnp.zeros((b,), bool)
         tok = self._sample(logits, key)
         for i in range(n_steps):
-            out.append(np.asarray(tok[:, 0]))
+            out.append(tok[:, 0])
             if self.eos_id is not None:
                 done = done | (tok[:, 0] == self.eos_id)
-                if bool(jnp.all(done)):
+                if (i + 1) % EOS_CHECK_EVERY == 0 \
+                        and bool(jnp.all(done)):
                     break
             logits, cache = self._step(self.params, tok, cache)
             key, sub = jax.random.split(key)
             tok = self._sample(logits, sub)
-        return GenerationResult(tokens=np.stack(out, axis=1),
-                                steps=len(out))
+        return GenerationResult(
+            tokens=np.asarray(jnp.stack(out, axis=1)), steps=len(out))
+
+    def modeled_bytes_per_token(self) -> int:
+        """Modeled HBM weight traffic of ONE batched decode step (the
+        whole batch shares it): every GEMM projection leaf streams
+        through VMEM once per step, at its storage width — one
+        byte/element + scale vector for fused-int8 weights, two for
+        bf16.  This is the term the mixed-precision path halves."""
+        from repro import quant
+        return quant.gemm_weight_bytes(self.params)
