@@ -5,10 +5,15 @@ container) against raw ``jnp.dot`` to confirm the kernel layer adds no
 dispatch overhead, plus the Pallas kernels in interpret mode on a small
 shape for functional parity.  Real kernel throughput numbers come from
 the roofline analysis (the container has no TPU).
+
+Also writes ``BENCH_gemm.json`` (rows + the fused-vs-unfused SwiGLU
+modeled-HBM ratios) so the perf trajectory is machine-readable across
+PRs; the pallas-interpret CI job uploads it as an artifact.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -22,6 +27,8 @@ from repro.core.bandwidth import estimate
 from repro.core.hardware import TPU_V5E
 from repro.core.tiling import GemmProblem, TileConfig
 from repro.kernels import ops, ref
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_gemm.json")
 
 
 def _time(fn, *args, iters: int = 5) -> float:
@@ -121,6 +128,91 @@ def run(report) -> None:
                bf16_mib=f"{hbm16/2**20:.1f}",
                int8_mib=f"{hbm8/2**20:.1f}",
                ratio=f"{hbm8/hbm16:.2f}", ok=hbm8 <= 0.6 * hbm16)
+
+    # ------------------------------------------------ fused-MLP rows
+    # wall-clock: fused SwiGLU dispatch (gated + epilogue ops) vs the
+    # unfused three-GEMM + XLA-silu composition, public ops path
+    d_m, d_ff = 512, 1536
+    x = jax.random.normal(key, (4, 64, d_m), jnp.float32)
+    wg = jax.random.normal(jax.random.PRNGKey(2), (d_m, d_ff),
+                           jnp.float32)
+    wu = jax.random.normal(jax.random.PRNGKey(3), (d_m, d_ff),
+                           jnp.float32)
+    wd = jax.random.normal(jax.random.PRNGKey(4), (d_ff, d_m),
+                           jnp.float32)
+
+    def fused_mlp(x):
+        h = ops.gemm_gated(x, wg, wu)
+        return ops.gemm_fused(h, wd, residual=x)
+
+    def unfused_mlp(x):
+        gate = ops.gemm(x, wg)
+        up = ops.gemm(x, wu)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        return x + ops.gemm(h, wd)
+
+    t_fused = _time(jax.jit(fused_mlp), x)
+    t_unfused = _time(jax.jit(unfused_mlp), x)
+    err = float(jnp.max(jnp.abs(fused_mlp(x) - unfused_mlp(x))))
+    report.row("gemm", f"swiglu fused-mlp wall-clock b4s64 d{d_m}",
+               fused_us=f"{t_fused*1e6:.0f}",
+               unfused_us=f"{t_unfused*1e6:.0f}",
+               max_abs_err=f"{err:.2e}",
+               ok=err < 1e-3 and t_fused < 3 * t_unfused)
+
+    # gated kernel interpret parity on a small shape
+    prev_mode = os.environ.get("REPRO_KERNELS")
+    os.environ["REPRO_KERNELS"] = "interpret"
+    try:
+        xs = x[0, :16].astype(jnp.bfloat16)
+        got = ops.gemm_gated(xs, wg[:, :256].astype(jnp.bfloat16),
+                             wu[:, :256].astype(jnp.bfloat16),
+                             tile=TileConfig(16, 128, 128, "aie"))
+        zg = ref.gemm_ref(xs, wg[:, :256].astype(jnp.bfloat16),
+                          out_dtype=jnp.float32)
+        zu = ref.gemm_ref(xs, wu[:, :256].astype(jnp.bfloat16),
+                          out_dtype=jnp.float32)
+        want = jax.nn.silu(zg) * zu
+        rel = float(jnp.linalg.norm(got.astype(jnp.float32) - want)
+                    / jnp.linalg.norm(want))
+        report.row("gemm", "gated pallas-aie 16x512x256 interpret",
+                   rel_err=f"{rel:.4f}", ok=rel < 2e-2)
+    finally:
+        if prev_mode is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = prev_mode
+
+    # modeled HBM bytes/layer, fused vs unfused SwiGLU (the paper's
+    # in-array cascade carried past the flush).  Decode shape: the
+    # weight stream is an identical irreducible floor on both sides, so
+    # the credit is reported on the activation/intermediate component;
+    # at the train shape the (m, d_ff) intermediates dominate and the
+    # drop shows on the layer total.
+    ratios = {}
+    for label, m_mlp, comp, thresh in (
+            ("decode_16x4096xff14336", 16, "activations", 0.7),
+            ("train_8192x4096xff14336", 8192, "total", 0.7)):
+        fu = dse.mlp_traffic(m_mlp, 4096, 14336, fused=True,
+                             residual=True)
+        un = dse.mlp_traffic(m_mlp, 4096, 14336, fused=False,
+                             residual=True)
+        ratio = fu[comp] / un[comp]
+        ratios[label] = {
+            "component": comp, "ratio": round(ratio, 4),
+            "fused_bytes": fu, "unfused_bytes": un,
+        }
+        report.row("gemm", f"swiglu modeled HBM {label}",
+                   component=comp,
+                   unfused_mib=f"{un[comp]/2**20:.1f}",
+                   fused_mib=f"{fu[comp]/2**20:.1f}",
+                   ratio=f"{ratio:.2f}", ok=ratio <= thresh)
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"rows": report.rows, "swiglu_fused_hbm": ratios,
+                   "w8a16_decode_hbm_ratio": round(hbm8 / hbm16, 4)},
+                  f, indent=2, default=str)
+    report.row("gemm", "bench json", path=BENCH_JSON, ok=True)
 
 
 if __name__ == "__main__":

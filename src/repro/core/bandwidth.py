@@ -52,7 +52,18 @@ def hbm_traffic_bytes(tile: TileConfig, p: GemmProblem) -> float:
     move their fp32 scale vectors: a (1, n) per-output-channel vector
     rides with every B panel read, a (m, 1) per-row vector with every A
     panel read.
+
+    Fused extensions: the dual-B gated kernel (``p.n_b_operands == 2``)
+    bills *both* B streams (and both scale vectors) while A still moves
+    once per n-column — this is exactly the traffic credit of fusing
+    SwiGLU's gate/up GEMMs: one A stream instead of two, and zero HBM
+    bytes for the (m, n) gate/up intermediates the unfused composition
+    writes and re-reads.  A fused epilogue bills its own operands: the
+    (1, n) f32 bias vector rides with every m-row of B panels, the
+    (m, n) residual is read once.
     """
+    from repro.kernels.epilogue import Epilogue
+    ep = Epilogue.parse(p.epilogue)
     gm, gn, gk = tile.grid(p)
     pm_, pk, pn = tile.padded_dims(p)
     a_b = dtype_bytes(p.a_dtype)
@@ -60,23 +71,25 @@ def hbm_traffic_bytes(tile: TileConfig, p: GemmProblem) -> float:
     out_b = dtype_bytes(p.out_dtype)
     acc_b = dtype_bytes(p.acc_dtype)
     a_bytes = pm_ * pk * a_b
-    b_bytes = pk * pn * b_b
+    b_bytes = pk * pn * b_b * p.n_b_operands
     c_bytes = pm_ * pn * out_b
     a_scale = pm_ * 4 if p.a_dtype == "int8" else 0
-    b_scale = pn * 4 if p.b_dtype == "int8" else 0
+    b_scale = pn * 4 * p.n_b_operands if p.b_dtype == "int8" else 0
+    bias_bytes = pn * 4 * gm if ep.bias else 0
+    res_bytes = pm_ * pn * out_b if ep.residual else 0
     if tile.strategy == "aie":
         return ((a_bytes + a_scale) * gn + (b_bytes + b_scale) * gm
-                + c_bytes)
+                + c_bytes + bias_bytes + res_bytes)
     # 'tb'
     c_rmw = pm_ * pn * acc_b
     return (a_bytes + a_scale) + (b_bytes + b_scale) * gm \
-        + c_rmw * (2 * gk - 1) + c_bytes
+        + c_rmw * (2 * gk - 1) + c_bytes + bias_bytes + res_bytes
 
 
 def estimate(tile: TileConfig, p: GemmProblem, chip: TPUChip = TPU_V5E
              ) -> TrafficEstimate:
     pm_, pk, pn = tile.padded_dims(p)
-    flops = 2.0 * pm_ * pk * pn
+    flops = 2.0 * pm_ * pk * pn * p.n_b_operands
     # int8 MXU rate needs *both* operands at 8 bits; W8A16 dequantizes
     # in-register and multiplies at the bf16 rate.
     peak = chip.peak_int8_ops \

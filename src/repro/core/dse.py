@@ -34,6 +34,7 @@ from repro.core.tiling import (
     STRATEGIES,
     GemmProblem,
     TileConfig,
+    dtype_bytes,
     min_sublane,
     round_up,
 )
@@ -81,14 +82,18 @@ def _lane_candidates(dim: int) -> Sequence[int]:
 
 @functools.lru_cache(maxsize=4096)
 def _solve_cached(m: int, k: int, n: int, a_dtype: str, b_dtype: str,
-                  out_dtype: str, acc_dtype: str, chip_name: str,
+                  out_dtype: str, acc_dtype: str, epilogue: str,
+                  n_b_operands: int, chip_name: str,
                   budget_fraction: float, top: int
                   ) -> Tuple["TileDesign", ...]:
     assert chip_name == TPU_V5E.name, "single-target build"
     chip = TPU_V5E
-    p = GemmProblem(m, k, n, a_dtype, out_dtype, acc_dtype, b_dtype)
+    p = GemmProblem(m, k, n, a_dtype, out_dtype, acc_dtype, b_dtype,
+                    epilogue, n_b_operands)
     designs: List[TileDesign] = []
     for strategy in STRATEGIES:
+        if n_b_operands > 1 and strategy == "tb":
+            continue    # the gated dual-B kernel is output-stationary only
         # sublane minima are per-operand: bm follows A's dtype; B's
         # (bk, bn) block is billed at b_dtype inside fits_vmem, which is
         # what admits ~2x bigger bk for int8 weight streams.
@@ -118,23 +123,100 @@ def solve(p: GemmProblem, chip: TPUChip = TPU_V5E,
           ) -> List[TileDesign]:
     """Ranked tiling designs for a GEMM problem."""
     return list(_solve_cached(p.m, p.k, p.n, p.a_dtype, p.b_dtype,
-                              p.out_dtype, p.acc_dtype, chip.name,
+                              p.out_dtype, p.acc_dtype, p.epilogue,
+                              p.n_b_operands, chip.name,
                               budget_fraction, top))
 
 
 def best_tile(m: int, k: int, n: int, in_dtype: str = "bfloat16",
               out_dtype: str = "bfloat16", acc_dtype: str = "float32",
               strategy: Optional[str] = None, *,
-              b_dtype: Optional[str] = None) -> TileConfig:
+              b_dtype: Optional[str] = None, epilogue: str = "",
+              n_b_operands: int = 1) -> TileConfig:
     """The DSE winner (optionally restricted to one strategy) — what
     ``repro.kernels.ops.gemm`` uses when no tile is given.
 
     ``in_dtype`` is A's dtype; pass ``b_dtype="int8"`` for the fused
     quantized-weight path (W8A16 / W8A8) so the search bills B at one
-    byte/element.
+    byte/element.  ``epilogue`` (an :class:`repro.kernels.epilogue
+    .Epilogue` key string) bills the fused bias/residual operands, and
+    ``n_b_operands=2`` searches the dual-B gated kernel's real footprint
+    (second B stream + second accumulator; 'aie' only).
     """
-    p = GemmProblem(m, k, n, in_dtype, out_dtype, acc_dtype, b_dtype)
+    p = GemmProblem(m, k, n, in_dtype, out_dtype, acc_dtype, b_dtype,
+                    epilogue, n_b_operands)
     for d in solve(p):
         if strategy is None or d.tile.strategy == strategy:
             return d.tile
     raise ValueError(f"no feasible {strategy!r} tiling for {p}")
+
+
+# ---------------------------------------------------------------------------
+# Layer-level traffic: fused vs unfused MLP compositions
+# ---------------------------------------------------------------------------
+
+def _gemm_traffic(p: GemmProblem, chip: TPUChip) -> Tuple[float, float]:
+    """(total, weight-stream) HBM bytes of one GEMM at its DSE winner.
+
+    The weight component is billed with the winner's real reuse: the B
+    panels (and dequant scale vectors) stream once per m-block row, so
+    gm > 1 multiplies the weight bytes — attributing those re-streams to
+    the weight side keeps the ``activations`` remainder honest.
+    """
+    d = solve(p, chip, top=1)[0]
+    gm, _, _ = d.tile.grid(p)
+    scale = p.n * 4 * p.n_b_operands if p.b_dtype == "int8" else 0
+    w = (p.b_bytes * p.n_b_operands + scale) * gm
+    return d.traffic.hbm_bytes, w
+
+
+def mlp_traffic(m: int, d: int, d_ff: int, *, fused: bool,
+                gated: bool = True, a_dtype: str = "bfloat16",
+                b_dtype: Optional[str] = None,
+                residual: bool = False,
+                chip: TPUChip = TPU_V5E) -> dict:
+    """Modeled HBM bytes of one MLP layer (SwiGLU when ``gated`` else a
+    single-activation MLP), with each constituent GEMM at its own DSE
+    winner.  Returns ``{"total", "weights", "activations"}``.
+
+    Unfused (the pre-epilogue composition): gate/up (or in) GEMMs write
+    their (m, d_ff) intermediates to HBM, an XLA elementwise pass re-reads
+    them and writes the gated h, and the down GEMM reads h back.  Fused:
+    the gated (or activation-epilogue) kernel emits h directly — the
+    gate/up intermediates never touch HBM and A streams once — and the
+    down GEMM can absorb the residual add.
+
+    ``weights`` is the B-panel traffic at each winner's real reuse
+    (gm passes); at decode shapes (gm == 1, single pass) it is an
+    identical irreducible floor on both sides, so the fusion credit
+    lands entirely in the ``activations`` component — which is why
+    decode-shaped layers report the drop on that component.
+    """
+    act_b = dtype_bytes(a_dtype)
+    n_up = 2 if gated else 1
+
+    if fused:
+        if gated:
+            p_up = GemmProblem(m, d, d_ff, a_dtype, a_dtype, "float32",
+                               b_dtype, "silu", 2)
+        else:
+            p_up = GemmProblem(m, d, d_ff, a_dtype, a_dtype, "float32",
+                               b_dtype, "gelu", 1)
+        p_down = GemmProblem(m, d_ff, d, a_dtype, a_dtype, "float32",
+                             b_dtype, "res" if residual else "", 1)
+        t_up, w_up = _gemm_traffic(p_up, chip)
+        t_down, w_down = _gemm_traffic(p_down, chip)
+        total, w = t_up + t_down, w_up + w_down
+        return {"total": total, "weights": w, "activations": total - w}
+
+    p_wide = GemmProblem(m, d, d_ff, a_dtype, a_dtype, "float32", b_dtype)
+    p_down = GemmProblem(m, d_ff, d, a_dtype, a_dtype, "float32", b_dtype)
+    t_wide, w_wide = _gemm_traffic(p_wide, chip)
+    t_down, w_down = _gemm_traffic(p_down, chip)
+    total = n_up * t_wide + t_down
+    # XLA epilogue pass: read every (m, d_ff) intermediate, write h once
+    total += (n_up + 1) * m * d_ff * act_b
+    if residual:
+        total += 2 * m * d * act_b          # read x, write x + down(h)
+    w = n_up * w_wide + w_down
+    return {"total": total, "weights": w, "activations": total - w}

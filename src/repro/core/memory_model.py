@@ -45,11 +45,14 @@ class VmemFootprint:
     out_bytes: int
     acc_bytes: int
     scale_bytes: int = 0          # fused-dequant fp32 scale vector blocks
+    bias_bytes: int = 0           # fused-epilogue (1, bn) f32 bias blocks
+    residual_bytes: int = 0       # fused-epilogue (bm, bn) residual stream
 
     @property
     def total(self) -> int:
         return (self.a_bytes + self.b_bytes + self.out_bytes
-                + self.acc_bytes + self.scale_bytes)
+                + self.acc_bytes + self.scale_bytes + self.bias_bytes
+                + self.residual_bytes)
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self) | {"total": self.total}
@@ -69,15 +72,32 @@ def vmem_footprint(tile: TileConfig, p: GemmProblem,
     one byte/element, which is exactly what lets the DSE roughly double
     the feasible ``bk`` for W8A16 GEMMs.  A quantized B additionally
     streams a (1, bn) fp32 per-output-channel scale block.
+
+    Fused extensions: the gated dual-B kernel (``p.n_b_operands == 2``)
+    doubles the B stream, the scale blocks and the accumulator scratch;
+    a fused epilogue (``p.epilogue``) adds its (1, bn) f32 bias blocks
+    and/or its (bm, bn) out-dtype residual stream.
     """
+    from repro.kernels.epilogue import Epilogue
+    ep = Epilogue.parse(p.epilogue)
     a = padded_tile_bytes(tile.bm, tile.bk, p.a_dtype, chip)
-    b = padded_tile_bytes(tile.bk, tile.bn, p.b_dtype, chip)
+    b = p.n_b_operands * padded_tile_bytes(tile.bk, tile.bn, p.b_dtype,
+                                           chip)
     o = padded_tile_bytes(tile.bm, tile.bn, p.out_dtype, chip)
-    acc = padded_tile_bytes(tile.bm, tile.bn, p.acc_dtype, chip)
+    acc = p.n_b_operands * padded_tile_bytes(tile.bm, tile.bn, p.acc_dtype,
+                                             chip)
     scale = 0
     if p.b_dtype == "int8":
-        scale = PIPELINE_STAGES * padded_tile_bytes(1, tile.bn, "float32",
-                                                    chip)
+        scale = p.n_b_operands * PIPELINE_STAGES * padded_tile_bytes(
+            1, tile.bn, "float32", chip)
+    bias = 0
+    if ep.bias:
+        bias = PIPELINE_STAGES * padded_tile_bytes(1, tile.bn, "float32",
+                                                   chip)
+    residual = 0
+    if ep.residual:
+        residual = PIPELINE_STAGES * padded_tile_bytes(
+            tile.bm, tile.bn, p.out_dtype, chip)
     if tile.strategy == "aie":
         return VmemFootprint(
             a_bytes=PIPELINE_STAGES * a,
@@ -85,6 +105,8 @@ def vmem_footprint(tile: TileConfig, p: GemmProblem,
             out_bytes=PIPELINE_STAGES * o,
             acc_bytes=acc,
             scale_bytes=scale,
+            bias_bytes=bias,
+            residual_bytes=residual,
         )
     # 'tb': A resident; C is both input and output stream (read-modify-
     # write accumulation in the output buffer, like the paper's PL adders).
@@ -95,6 +117,8 @@ def vmem_footprint(tile: TileConfig, p: GemmProblem,
             tile.bm, tile.bn, p.acc_dtype, chip),
         acc_bytes=0,
         scale_bytes=scale,
+        bias_bytes=bias,
+        residual_bytes=residual,
     )
 
 

@@ -66,6 +66,15 @@ class GemmProblem:
     read-only compat property.  Quantized int8 operands carry fp32 scale
     vectors (per-row for A, per-output-channel for B) that the traffic
     model bills alongside the operand.
+
+    Fused-epilogue GEMMs carry two more dimensions the DSE must see:
+
+    * ``epilogue`` — the canonical :class:`repro.kernels.epilogue.Epilogue`
+      key string (e.g. ``"bias+silu+res"``; ``""`` = none).  Bias and
+      residual operands take VMEM blocks and HBM reads of their own.
+    * ``n_b_operands`` — 2 for the dual-B gated kernel
+      (``act(A B_gate) * (A B_up)``): both B streams and both VMEM
+      accumulators are billed, while A is billed once.
     """
 
     m: int
@@ -75,10 +84,13 @@ class GemmProblem:
     out_dtype: str = "bfloat16"
     acc_dtype: str = "float32"
     b_dtype: Optional[str] = None
+    epilogue: str = ""
+    n_b_operands: int = 1
 
     def __post_init__(self):
         if self.b_dtype is None:
             object.__setattr__(self, "b_dtype", self.a_dtype)
+        assert self.n_b_operands in (1, 2), self.n_b_operands
 
     @property
     def in_dtype(self) -> str:
@@ -91,7 +103,7 @@ class GemmProblem:
 
     @property
     def flops(self) -> float:
-        return 2.0 * self.m * self.k * self.n
+        return 2.0 * self.m * self.k * self.n * self.n_b_operands
 
     @property
     def a_bytes(self) -> int:
@@ -99,11 +111,13 @@ class GemmProblem:
 
     @property
     def b_bytes(self) -> int:
+        """Bytes of ONE B operand (the gated kernel's second stream is
+        billed by the traffic/footprint models via ``n_b_operands``)."""
         return self.k * self.n * dtype_bytes(self.b_dtype)
 
     @property
     def in_bytes(self) -> int:
-        return self.a_bytes + self.b_bytes
+        return self.a_bytes + self.b_bytes * self.n_b_operands
 
     @property
     def out_bytes(self) -> int:

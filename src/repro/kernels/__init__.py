@@ -16,3 +16,10 @@ def _compiler_params(**kwargs):
     cls = getattr(pltpu, "CompilerParams", None) \
         or getattr(pltpu, "TPUCompilerParams")
     return cls(**kwargs)
+
+
+def acc_dtype(in_dtype):
+    """The paper's accumulation rule, shared by every GEMM kernel:
+    int8 operands accumulate in int32, floats in fp32."""
+    import jax.numpy as jnp
+    return jnp.int32 if in_dtype == jnp.int8 else jnp.float32

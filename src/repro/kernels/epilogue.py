@@ -1,0 +1,129 @@
+"""Declarative GEMM epilogue spec — the paper's in-array reduction,
+extended past the flush.
+
+Paper mapping (SS IV-A): on Versal the adder-tree cascade reduces partial
+products *inside* the AIE array, so each C element leaves the fabric
+exactly once.  The TPU analogue keeps the accumulator in VMEM scratch and
+writes the C block on the last-k grid step — which makes that flush the
+one place a bias add, an activation, a residual add, or an output
+quantization can run for free: the accumulator is already on-chip in
+fp32/int32, so fusing the epilogue there removes the full-width
+intermediate that an unfused ``gemm -> XLA epilogue`` round-trips through
+HBM.
+
+An :class:`Epilogue` is a tiny declarative value object:
+
+* it is **hashable** (frozen dataclass), so kernels can take it as a jit
+  static argument and the DSE can key its solution cache on it;
+* ``key`` serializes it into the canonical ``"bias+silu+res+q8"`` string
+  that :class:`repro.core.tiling.GemmProblem` carries (keeping the cost
+  model free of kernel imports in its cache signature);
+* :func:`apply_epilogue` is the single shared implementation of the math
+  — Pallas kernel bodies and the pure-jnp references both call it, so
+  parity is structural, not coincidental.
+
+Fixed application order (matching every model call site)::
+
+    x (f32 accumulator, b_scale already applied)
+      -> + bias            (per-output-channel, f32)
+      -> activation        (silu | gelu | relu, f32)
+      -> + residual        (same shape as C)
+      -> / out_scale, round, clip   (optional int8 output quantization)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,        # tanh approximation, like the model layers
+    "relu": jax.nn.relu,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """What the GEMM flush applies before the C block leaves VMEM."""
+
+    bias: bool = False
+    activation: Optional[str] = None     # "silu" | "gelu" | "relu"
+    residual: bool = False
+    out_quant: bool = False              # int8 output, caller-given scale
+
+    def __post_init__(self):
+        if self.activation is not None \
+                and self.activation not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {self.activation!r}")
+
+    def __bool__(self) -> bool:
+        return (self.bias or self.activation is not None or self.residual
+                or self.out_quant)
+
+    @property
+    def key(self) -> str:
+        """Canonical string form (cost-model / cache key): e.g.
+        ``"bias+silu+res"``; the empty epilogue serializes to ``""``."""
+        parts = []
+        if self.bias:
+            parts.append("bias")
+        if self.activation:
+            parts.append(self.activation)
+        if self.residual:
+            parts.append("res")
+        if self.out_quant:
+            parts.append("q8")
+        return "+".join(parts)
+
+    @classmethod
+    def parse(cls, key: str) -> "Epilogue":
+        """Inverse of :attr:`key` (used by the cost model, which stores
+        the epilogue as a plain string inside ``GemmProblem``)."""
+        if not key:
+            return cls()
+        parts = key.split("+")
+        act = [p for p in parts if p in ACTIVATIONS]
+        if len(act) > 1:
+            raise ValueError(f"multiple activations in {key!r}")
+        known = set(act) | {"bias", "res", "q8"}
+        bad = [p for p in parts if p not in known]
+        if bad:
+            raise ValueError(f"unknown epilogue terms {bad} in {key!r}")
+        return cls(bias="bias" in parts,
+                   activation=act[0] if act else None,
+                   residual="res" in parts,
+                   out_quant="q8" in parts)
+
+    @classmethod
+    def from_args(cls, bias=None, activation: Optional[str] = None,
+                  residual=None, out_scale=None) -> "Epilogue":
+        """Spec from the optional operand set an op-level call provides."""
+        return cls(bias=bias is not None, activation=activation,
+                   residual=residual is not None,
+                   out_quant=out_scale is not None)
+
+
+def apply_epilogue(x: jax.Array, *, activation: Optional[str] = None,
+                   bias: Optional[jax.Array] = None,
+                   residual: Optional[jax.Array] = None,
+                   out_scale: Optional[jax.Array] = None) -> jax.Array:
+    """The epilogue math, on an fp32 accumulator (block or full array).
+
+    Shared by the Pallas kernel flush paths and the jnp references; the
+    caller casts the result to the output dtype (int8 when ``out_scale``
+    quantization is on).
+    """
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    if activation is not None:
+        x = ACTIVATIONS[activation](x)
+    if residual is not None:
+        x = x + residual.astype(jnp.float32)
+    if out_scale is not None:
+        x = jnp.clip(jnp.round(x / out_scale.astype(jnp.float32)),
+                     -127, 127)
+    return x

@@ -36,9 +36,11 @@ def gemm_ref(a: jax.Array, b: jax.Array, *,
             and out_dtype is not None
             and jnp.dtype(out_dtype) == jnp.bfloat16):
         return jnp.dot(a, b, preferred_element_type=jnp.bfloat16)
-    out = jnp.dot(a.astype(acc_dtype) if a.dtype != jnp.int8 else a,
-                  b.astype(acc_dtype) if b.dtype != jnp.int8 else b,
-                  preferred_element_type=acc_dtype)
+    # operands stay at their storage dtype — pre-casting to the
+    # accumulator dtype would materialize full-width fp32 copies of both
+    # operands in HBM (the lm_head chunked-xent hot path pays k*V of it);
+    # preferred_element_type alone gets fp32 MXU accumulation for free
+    out = jnp.dot(a, b, preferred_element_type=acc_dtype)
     return out.astype(out_dtype or acc_dtype)
 
 
@@ -68,6 +70,61 @@ def gemm_fused_ref(a: jax.Array, b_q: jax.Array, b_scale: jax.Array,
                       preferred_element_type=jnp.float32)
         out = acc * b_scale
     return out.astype(out_dtype or jnp.float32)
+
+
+def _acc_f32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Accumulate A @ B into fp32, mirroring the kernels: int8 x int8
+    accumulates int32 then widens; a float A sees an in-register-cast B
+    (W8A16) and accumulates fp32."""
+    if a.dtype == jnp.int8 and b.dtype == jnp.int8:
+        return jnp.dot(a, b,
+                       preferred_element_type=jnp.int32) \
+            .astype(jnp.float32)
+    if b.dtype == jnp.int8:
+        b = b.astype(a.dtype)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def gemm_epilogue_ref(a: jax.Array, b: jax.Array, *,
+                      b_scale: Optional[jax.Array] = None,
+                      bias: Optional[jax.Array] = None,
+                      activation: Optional[str] = None,
+                      residual: Optional[jax.Array] = None,
+                      out_scale: Optional[jax.Array] = None,
+                      out_dtype=None) -> jax.Array:
+    """Oracle for the fused-epilogue kernel flush: accumulate, apply the
+    optional per-output-channel dequant scale, then
+    bias -> activation -> residual -> output quantization, all in fp32,
+    exactly like the kernels' last-k/final-chunk bodies."""
+    from repro.kernels.epilogue import apply_epilogue
+    x = _acc_f32(a, b)
+    if b_scale is not None:
+        x = x * b_scale.astype(jnp.float32)
+    x = apply_epilogue(x, activation=activation, bias=bias,
+                       residual=residual, out_scale=out_scale)
+    if out_dtype is None:
+        out_dtype = jnp.int8 if out_scale is not None else jnp.float32
+    return x.astype(out_dtype)
+
+
+def gemm_gated_ref(a: jax.Array, b_gate: jax.Array, b_up: jax.Array, *,
+                   activation: str = "silu",
+                   bg_scale: Optional[jax.Array] = None,
+                   bu_scale: Optional[jax.Array] = None,
+                   out_dtype=None) -> jax.Array:
+    """Oracle for the dual-B gated kernel:
+    ``act(A @ B_gate) * (A @ B_up)`` with fp32 gate math (per-output-
+    channel dequant scales applied to each accumulator first)."""
+    from repro.kernels.epilogue import ACTIVATIONS
+    xg = _acc_f32(a, b_gate)
+    xu = _acc_f32(a, b_up)
+    if bg_scale is not None:
+        xg = xg * bg_scale.astype(jnp.float32)
+        xu = xu * bu_scale.astype(jnp.float32)
+    out = ACTIVATIONS[activation](xg) * xu
+    if out_dtype is None:
+        out_dtype = a.dtype if a.dtype != jnp.int8 else jnp.float32
+    return out.astype(out_dtype)
 
 
 def gemm_int8_ref(a_q: jax.Array, b_q: jax.Array,

@@ -92,12 +92,18 @@ def init_swiglu(key, d: int, d_ff: int, dtype) -> dict:
             "w_down": dense_init(k3, d_ff, d, dtype)}
 
 
-def swiglu(params: dict, x: jax.Array) -> jax.Array:
-    gate = ops.gemm(x, params["w_gate"])
-    up = ops.gemm(x, params["w_up"])
-    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+def swiglu(params: dict, x: jax.Array,
+           residual: Optional[jax.Array] = None) -> jax.Array:
+    """SwiGLU through the fused dual-B gated kernel: one call computes
+    silu(x W_gate) * (x W_up) with a single resident x stream — the
+    (m, d_ff) gate/up intermediates never round-trip through HBM the way
+    the old three-GEMM + XLA-silu composition did.  ``residual`` (the
+    transformer residual-stream x) fuses into the down-projection's
+    flush."""
+    h = ops.gemm_gated(x, params["w_gate"], params["w_up"],
+                       activation="silu")
     h = shd.act(h, ("batch", None, "model"))
-    return ops.gemm(h, params["w_down"])
+    return ops.gemm_fused(h, params["w_down"], residual=residual)
 
 
 def init_gelu_mlp(key, d: int, d_ff: int, dtype) -> dict:
@@ -106,11 +112,11 @@ def init_gelu_mlp(key, d: int, d_ff: int, dtype) -> dict:
             "w_out": dense_init(k2, d_ff, d, dtype)}
 
 
-def gelu_mlp(params: dict, x: jax.Array) -> jax.Array:
-    h = jax.nn.gelu(ops.gemm(x, params["w_in"]).astype(jnp.float32)) \
-        .astype(x.dtype)
+def gelu_mlp(params: dict, x: jax.Array,
+             residual: Optional[jax.Array] = None) -> jax.Array:
+    h = ops.gemm_fused(x, params["w_in"], activation="gelu")
     h = shd.act(h, ("batch", None, "model"))
-    return ops.gemm(h, params["w_out"])
+    return ops.gemm_fused(h, params["w_out"], residual=residual)
 
 
 # ---------------------------------------------------------------------------
@@ -167,12 +173,16 @@ def project_kv(params: dict, memory: jax.Array, spec: AttnSpec
 def attention_block(params: dict, x: jax.Array, spec: AttnSpec,
                     positions: Optional[jax.Array] = None,
                     kv: Optional[Tuple[jax.Array, jax.Array]] = None,
-                    memory: Optional[jax.Array] = None) -> jax.Array:
+                    memory: Optional[jax.Array] = None,
+                    residual: Optional[jax.Array] = None) -> jax.Array:
     """Full-sequence (train / prefill / encoder) attention.
 
     Cross-attention: pass ``memory`` (raw (b, f, d) encoder output — k/v
     are projected here) or ``kv`` (already-projected heads, e.g. from a
     decode cache).  Either disables causality.
+
+    ``residual`` (the pre-norm residual-stream x) fuses into the output
+    projection's kernel flush instead of a separate XLA add.
     """
     b, s, _ = x.shape
     if positions is None:
@@ -191,7 +201,8 @@ def attention_block(params: dict, x: jax.Array, spec: AttnSpec,
         k, v = kv
         out = ops.attention(q, k, v, causal=False, window=0)
     out = shd.act(out, ("batch", None, "model", None))
-    return ops.gemm(out.reshape(b, s, -1), params["wo"])
+    return ops.gemm_fused(out.reshape(b, s, -1), params["wo"],
+                          residual=residual)
 
 
 def init_kv_cache(batch: int, max_len: int, spec: AttnSpec, dtype) -> dict:
@@ -200,12 +211,14 @@ def init_kv_cache(batch: int, max_len: int, spec: AttnSpec, dtype) -> dict:
 
 
 def attention_decode(params: dict, x: jax.Array, cache: dict,
-                     pos: jax.Array, spec: AttnSpec
+                     pos: jax.Array, spec: AttnSpec,
+                     residual: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, dict]:
     """Single-step decode: insert this step's k/v at ``pos`` (scalar int32)
     and attend over the cache with position masking (+ sliding window).
 
-    x: (b, 1, d).  Returns (out (b, 1, d), new cache).
+    x: (b, 1, d).  Returns (out (b, 1, d), new cache); ``residual`` fuses
+    the residual-stream add into the output projection.
     """
     b, s, _ = x.shape
     assert s == 1
@@ -225,7 +238,8 @@ def attention_decode(params: dict, x: jax.Array, cache: dict,
 
     out = ops.decode_attention(q[:, 0], k_att, v_att, pos,
                                window=spec.window)
-    out = ops.gemm(out.reshape(b, 1, -1), params["wo"])
+    out = ops.gemm_fused(out.reshape(b, 1, -1), params["wo"],
+                         residual=residual)
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -269,6 +283,11 @@ def chunked_softmax_xent(h: jax.Array, lm_head: jax.Array,
 
     def chunk_loss(args):
         hc, lc, mc = args                       # (b, cs, d) / (b, cs)
+        # fp32 logits come straight out of the GEMM accumulator
+        # (out_dtype) — no bf16 logits tensor is written and re-upcast,
+        # and the reference path keeps operands at storage dtype
+        # (preferred_element_type accumulation), so no fp32 copy of
+        # lm_head round-trips HBM either
         logits = ops.gemm(hc, lm_head, out_dtype=jnp.float32)
         logz = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]

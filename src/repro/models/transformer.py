@@ -82,8 +82,12 @@ def _mlp_init(key, cfg: ModelConfig):
     return L.init_swiglu(key, cfg.d_model, cfg.d_ff, cfg.dtype)
 
 
-def _mlp(cfg: ModelConfig, p, x):
-    return L.gelu_mlp(p, x) if cfg.family == "audio" else L.swiglu(p, x)
+def _mlp(cfg: ModelConfig, p, x, residual=None):
+    """MLP through the fused kernels; ``residual`` rides the down
+    projection's epilogue (one C write instead of GEMM + XLA add)."""
+    if cfg.family == "audio":
+        return L.gelu_mlp(p, x, residual=residual)
+    return L.swiglu(p, x, residual=residual)
 
 
 def init_layer(key, cfg: ModelConfig, kind: str) -> dict:
@@ -163,25 +167,27 @@ def apply_layer(p: dict, cfg: ModelConfig, kind: str, x: jax.Array, *,
     aux = jnp.zeros((), jnp.float32)
     spec = _attn_spec(cfg, kind, causal=causal)
     if kind in ("attn", "local", "moe"):
-        x = x + L.attention_block(p["attn"], _norm(cfg, p["norm1"], x),
-                                  spec)
+        # the residual-stream adds fuse into the output/down projections'
+        # kernel flushes (epilogue) — no separate XLA add round-trips
+        x = L.attention_block(p["attn"], _norm(cfg, p["norm1"], x),
+                              spec, residual=x)
         if enc_out is not None:
-            x = x + L.attention_block(p["cross"],
-                                      _norm(cfg, p["norm_x"], x), spec,
-                                      memory=enc_out)
+            x = L.attention_block(p["cross"],
+                                  _norm(cfg, p["norm_x"], x), spec,
+                                  memory=enc_out, residual=x)
         h = _norm(cfg, p["norm2"], x)
         if kind == "moe":
             y, aux = MOE.moe_ffn(p["moe"], h, top_k=cfg.top_k,
                                  capacity_factor=cfg.capacity_factor)
             x = x + y
         else:
-            x = x + _mlp(cfg, p["mlp"], h)
+            x = _mlp(cfg, p["mlp"], h, residual=x)
     elif kind == "ssm":
         x = x + M2.mamba2_block(p["mixer"], _norm(cfg, p["norm1"], x),
                                 cfg.ssm_state)
     elif kind == "rec":
         x = x + RG.rglru_block(p["rec"], _norm(cfg, p["norm1"], x))
-        x = x + _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x))
+        x = _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x), residual=x)
     else:
         raise ValueError(kind)
     return x, aux
@@ -330,21 +336,23 @@ def decode_layer(p: dict, cache: dict, cfg: ModelConfig, kind: str,
         if spec.window > 0 and cache_max <= spec.window:
             # bounded ring-buffer cache (the long_500k enabler)
             wpos = _sliding_pos(cfg, kind, pos, cache_max)
-            out, cache = _decode_ring(p, cache, spec, h, pos, wpos)
+            x, cache = _decode_ring(p, cache, spec, h, pos, wpos,
+                                    residual=x)
         else:
-            out, cache = L.attention_decode(p["attn"], h, cache, pos, spec)
-        x = x + out
+            x, cache = L.attention_decode(p["attn"], h, cache, pos, spec,
+                                          residual=x)
         if cross_kv is not None:
             q = _norm(cfg, p["norm_x"], x)
-            x = x + L.attention_block(
-                p["cross"], q, spec, kv=(cross_kv["k"], cross_kv["v"]))
+            x = L.attention_block(
+                p["cross"], q, spec, kv=(cross_kv["k"], cross_kv["v"]),
+                residual=x)
         h = _norm(cfg, p["norm2"], x)
         if kind == "moe":
             y, _ = MOE.moe_ffn(p["moe"], h, top_k=cfg.top_k,
                                capacity_factor=4.0)
             x = x + y
         else:
-            x = x + _mlp(cfg, p["mlp"], h)
+            x = _mlp(cfg, p["mlp"], h, residual=x)
     elif kind == "ssm":
         y, cache = M2.mamba2_decode(p["mixer"], _norm(cfg, p["norm1"], x),
                                     cache, cfg.ssm_state)
@@ -353,11 +361,12 @@ def decode_layer(p: dict, cache: dict, cfg: ModelConfig, kind: str,
         y, cache = RG.rglru_decode(p["rec"], _norm(cfg, p["norm1"], x),
                                    cache)
         x = x + y
-        x = x + _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x))
+        x = _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x), residual=x)
     return x, cache
 
 
-def _decode_ring(p, cache, spec: L.AttnSpec, x, pos, wpos):
+def _decode_ring(p, cache, spec: L.AttnSpec, x, pos, wpos,
+                 residual=None):
     """Windowed decode against a ring-buffer cache of size <= window:
     every resident entry is in-window by construction, so attention masks
     only un-written slots."""
@@ -384,7 +393,8 @@ def _decode_ring(p, cache, spec: L.AttnSpec, x, pos, wpos):
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v_cache.dtype),
                      v_cache, preferred_element_type=jnp.float32) \
         .astype(x.dtype)
-    out = ops.gemm(out.reshape(b, 1, -1), p["attn"]["wo"])
+    out = ops.gemm_fused(out.reshape(b, 1, -1), p["attn"]["wo"],
+                         residual=residual)
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -438,7 +448,8 @@ def prefill_layer(p: dict, cache: dict, cfg: ModelConfig, kind: str,
         positions = jnp.arange(s)
         q, k, v = L._project_qkv(p["attn"], h, spec, positions)
         out = ops.attention(q, k, v, causal=True, window=spec.window)
-        out = ops.gemm(out.reshape(b, s, -1), p["attn"]["wo"])
+        out = ops.gemm_fused(out.reshape(b, s, -1), p["attn"]["wo"],
+                             residual=x)
         cache_max = cache["k"].shape[1]
         if cache_max >= s:
             ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1)
@@ -449,18 +460,19 @@ def prefill_layer(p: dict, cache: dict, cfg: ModelConfig, kind: str,
             ck = jnp.roll(tail_k, shift, axis=1)
             cv = jnp.roll(tail_v, shift, axis=1)
         cache = {"k": ck, "v": cv}
-        x = x + out
+        x = out
         if cross_kv is not None:
             qx = _norm(cfg, p["norm_x"], x)
-            x = x + L.attention_block(
-                p["cross"], qx, spec, kv=(cross_kv["k"], cross_kv["v"]))
+            x = L.attention_block(
+                p["cross"], qx, spec, kv=(cross_kv["k"], cross_kv["v"]),
+                residual=x)
         hh = _norm(cfg, p["norm2"], x)
         if kind == "moe":
             y, _ = MOE.moe_ffn(p["moe"], hh, top_k=cfg.top_k,
                                capacity_factor=cfg.capacity_factor)
             x = x + y
         else:
-            x = x + _mlp(cfg, p["mlp"], hh)
+            x = _mlp(cfg, p["mlp"], hh, residual=x)
     elif kind == "ssm":
         h = _norm(cfg, p["norm1"], x)
         y, cache = _mamba2_prefill(p["mixer"], h, cache, cfg.ssm_state)
@@ -469,7 +481,7 @@ def prefill_layer(p: dict, cache: dict, cfg: ModelConfig, kind: str,
         h = _norm(cfg, p["norm1"], x)
         y, cache = _rglru_prefill(p["rec"], h, cache)
         x = x + y
-        x = x + _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x))
+        x = _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x), residual=x)
     return x, cache
 
 
