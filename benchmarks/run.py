@@ -23,6 +23,7 @@ MODULES = (
     "fig7_scalability",
     "tpu_dse",
     "gemm_bench",
+    "serve_bench",
     "roofline_report",
     "perf_iterations",
 )

@@ -1,0 +1,129 @@
+"""Continuous-batching serve benchmark (smoke-sized, CPU host).
+
+Runs the ragged acceptance trace — prompt lens 4/16/8/32, max_tokens
+8/32/16/4 — through the continuous 2-slot engine, checks every request
+is bit-identical to a solo batch-1 greedy run, and scores it against the
+old lockstep engine with a traffic-style work model:
+
+* one **slot-token unit** = one batch-slot occupying one sequence
+  position of work (a decode step costs ``n_slots`` units whether or not
+  every slot is live; a prefill costs its processed token positions,
+  padding included) — the serving analogue of the paper's HBM-traffic
+  scoring, where cost follows what is *streamed*, not what is useful;
+* **lockstep** groups requests FIFO into static batches of ``n_slots``,
+  pads prompts to the batch max, and decodes every member until the
+  batch max_tokens finishes (the old engine's semantics);
+* **continuous** admits per slot (exact prompts, no padding) and counts
+  its real measured decode steps — idle-slot tail steps included.
+
+Modeled tokens/sec is useful tokens per unit; the ratio is asserted
+>= 1.5x and written to ``BENCH_serve.json`` (with measured wall-clock
+numbers alongside) so the serving trajectory is machine-readable across
+PRs; the pallas-interpret CI job uploads it as an artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as T
+from repro.serve.engine import (ACCEPTANCE_TRACE, DecodeEngine,
+                                acceptance_requests, solo_greedy)
+
+BENCH_JSON = os.environ.get("REPRO_SERVE_BENCH_JSON", "BENCH_serve.json")
+
+PROMPT_LENS = tuple(p for p, _ in ACCEPTANCE_TRACE)
+MAX_TOKENS = tuple(mt for _, mt in ACCEPTANCE_TRACE)
+N_SLOTS = 2
+SPEEDUP_FLOOR = 1.5
+
+
+def lockstep_units(prompt_lens, max_tokens, n_slots) -> dict:
+    """Work model of the old lockstep engine: FIFO static batches of
+    ``n_slots``; prompts pad to the batch max; every member decodes
+    until the batch's slowest request finishes."""
+    prefill = decode_steps = 0
+    for i in range(0, len(prompt_lens), n_slots):
+        pls = prompt_lens[i:i + n_slots]
+        mts = max_tokens[i:i + n_slots]
+        prefill += max(pls) * len(pls)          # padded prompt tokens
+        decode_steps += max(mts) - 1            # first token rides prefill
+    return {"prefill_tokens": prefill, "decode_steps": decode_steps,
+            "slot_token_units": prefill + decode_steps * n_slots}
+
+
+def run(report) -> None:
+    cfg = get_smoke_config("smollm-360m")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = max(p + mt for p, mt in zip(PROMPT_LENS, MAX_TOKENS)) + 1
+    reqs = acceptance_requests(cfg.vocab)
+    useful = sum(MAX_TOKENS)
+
+    engine = DecodeEngine(params, cfg, batch=N_SLOTS, max_len=max_len)
+    # warm-up: compile every prompt-length bucket + the step, so the
+    # measured numbers exclude jit compilation
+    engine.run(acceptance_requests(cfg.vocab, seed=1))
+    engine.reset_metrics()
+
+    t0 = time.perf_counter()
+    results = {r.rid: r for r in engine.run(reqs)}
+    wall = time.perf_counter() - t0
+
+    # --- correctness: bit-identical to each request alone at batch 1
+    exact = 0
+    for req in reqs:
+        want = solo_greedy(params, cfg, req.prompt, req.max_tokens,
+                           max_len)
+        if np.array_equal(results[req.rid].tokens, want):
+            exact += 1
+    report.row("serve", "ragged trace vs solo batch-1 (greedy)",
+               bit_identical=f"{exact}/{len(reqs)}",
+               ok=exact == len(reqs))
+
+    # --- modeled work: slot-token units (see module docstring)
+    m = engine.metrics
+    cont_units = m["prefill_tokens"] + m["decode_steps"] * N_SLOTS
+    lock = lockstep_units(PROMPT_LENS, MAX_TOKENS, N_SLOTS)
+    cont_tps = useful / cont_units              # tokens per unit
+    lock_tps = useful / lock["slot_token_units"]
+    speedup = cont_tps / lock_tps
+    occupancy = engine.occupancy()
+    report.row("serve",
+               f"continuous vs lockstep, {N_SLOTS} slots (modeled)",
+               cont_units=cont_units,
+               lockstep_units=lock["slot_token_units"],
+               speedup=f"{speedup:.2f}x",
+               occupancy=f"{occupancy:.2f}",
+               ok=speedup >= SPEEDUP_FLOOR)
+    report.row("serve", "measured wall-clock (smoke, CPU)",
+               tok_s=f"{useful / wall:.1f}",
+               decode_tok_s=f"{engine.tokens_per_sec():.1f}",
+               steps=m["decode_steps"], ok=True)
+
+    payload = {
+        "trace": {"prompt_lens": PROMPT_LENS, "max_tokens": MAX_TOKENS,
+                  "n_slots": N_SLOTS, "useful_tokens": useful},
+        "continuous": {
+            "prefill_tokens": m["prefill_tokens"],
+            "decode_steps": m["decode_steps"],
+            "slot_token_units": cont_units,
+            "occupancy": occupancy,
+            "modeled_tokens_per_unit": cont_tps,
+            "measured_tok_s": useful / wall,
+            "measured_decode_tok_s": engine.tokens_per_sec(),
+        },
+        "lockstep": dict(lock, modeled_tokens_per_unit=lock_tps),
+        "modeled_speedup": speedup,
+        "bit_identical": exact == len(reqs),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    report.row("serve", f"wrote {BENCH_JSON}",
+               modeled_speedup=f"{speedup:.2f}x", ok=True)

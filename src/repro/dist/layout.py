@@ -217,11 +217,14 @@ def cache_specs(cache, mesh):
 
     Scanned caches under ``layers``/``cross`` are stacked
     ``(repeats, batch, ...)`` — batch at dim 1; unstacked ``tail``
-    caches carry batch at dim 0.  KV tensors additionally shard their
-    sequence dim over ``'model'`` (sequence-sharded cache reads are the
-    decode-side analogue of the paper's operand-reuse tiling: each
-    device keeps 1/|model| of the window resident).  Everything else
-    (ring positions, conv states, SSM states) shards batch only.
+    caches carry batch at dim 0, as does the per-slot ``pos`` vector
+    ((batch,) int32 — continuous batching gives every slot its own
+    decode position, so ``pos`` row-shards with the slots it indexes).
+    KV tensors additionally shard their sequence dim over ``'model'``
+    (sequence-sharded cache reads are the decode-side analogue of the
+    paper's operand-reuse tiling: each device keeps 1/|model| of the
+    window resident).  Everything else (conv states, SSM states) shards
+    batch only.
     """
     sizes = sharding.axis_sizes(mesh)
     model_ok = "model" in sizes

@@ -11,9 +11,11 @@ Grid: (b·hkv, S/bkv) with the kv-block dimension 'arbitrary' (sequential
 accumulation).  GQA is handled by shaping the query block as
 (groups, d) — the group dim rides the sublane axis, so MQA
 (recurrentgemma, groups=16) and GQA (deepseek, groups=8) tile the MXU
-without materializing repeated kv heads.  The current position enters as
-a prefetched scalar (`PrefetchScalarGridSpec`) used only for masking, so
-one compiled kernel serves every decode step.
+without materializing repeated kv heads.  The per-slot positions enter
+as a prefetched (b,) vector (`PrefetchScalarGridSpec`) indexed by the
+grid's batch coordinate and used only for masking, so one compiled
+kernel serves every decode step of a continuous batch — each row
+attends at its own length.
 """
 
 from __future__ import annotations
@@ -35,7 +37,7 @@ SUBLANES = 8
 def _flash_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
                          m_ref, l_ref, acc_ref, *,
                          scale: float, window: int, bkv: int,
-                         kv_len: int):
+                         kv_len: int, hkv: int):
     kvi = pl.program_id(1)
 
     @pl.when(kvi == 0)
@@ -44,7 +46,9 @@ def _flash_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pos = pos_ref[0]
+    # per-slot position: the prefetched (b,) vector indexed by this
+    # program's batch coordinate — each row masks at its own length
+    pos = pos_ref[pl.program_id(0) // hkv]
     q = q_ref[0, 0].astype(jnp.float32) * scale          # (gp, dp)
     k = k_ref[0, 0].astype(jnp.float32)                  # (bkv, dp)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (gp, bkv)
@@ -83,10 +87,13 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                  pos: jax.Array, *, window: int = 0, bkv: int = 512,
                  scale: float | None = None,
                  interpret: bool = False) -> jax.Array:
-    """q: (b, hq, d) one token; caches: (b, S, hkv, d); pos: () int32.
+    """q: (b, hq, d) one token per slot; caches: (b, S, hkv, d);
+    pos: (b,) int32 per-slot positions (a scalar broadcasts — the
+    lockstep special case).
 
-    Returns (b, hq, d).  Masks cache slots > pos (and a sliding window
-    when ``window`` > 0 — positions <= pos - window are excluded).
+    Returns (b, hq, d).  Row i masks cache slots > pos[i] (and a sliding
+    window when ``window`` > 0 — positions <= pos[i] - window are
+    excluded).
     """
     b, hq, d = q.shape
     _, skv, hkv, _ = k_cache.shape
@@ -116,7 +123,7 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
     kernel = functools.partial(
         _flash_decode_kernel, scale=scale, window=window, bkv=bkv,
-        kv_len=skv)
+        kv_len=skv, hkv=hkv)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -141,6 +148,6 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(jnp.asarray(pos, jnp.int32).reshape(1), qt, kt, vt)
+    )(jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,)), qt, kt, vt)
 
     return out[:, :, :groups, :d].reshape(b, hq, d)

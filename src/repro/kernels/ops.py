@@ -648,18 +648,22 @@ def _decode_attention_xla(q, k_cache, v_cache, pos, *, window):
     """Head-grouped einsums with operands at storage dtype + fp32
     accumulation — casting the cache itself to f32 would materialize and
     rewrite a full-precision copy of the entire stacked cache every
-    layer (measured 1.38 TB/step on deepseek decode_32k)."""
+    layer (measured 1.38 TB/step on deepseek decode_32k).
+
+    ``pos``: (b,) per-slot positions (scalar broadcasts) — row i masks
+    cache slots > pos[i], the continuous-batching contract."""
     b, hq, d = q.shape
     _, skv, hkv, _ = k_cache.shape
     groups = hq // hkv
     qg = q.reshape(b, hkv, groups, d)
     logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
                         preferred_element_type=jnp.float32) * d ** -0.5
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     k_pos = jnp.arange(skv)
-    mask = k_pos <= pos
+    mask = k_pos[None, :] <= posv[:, None]
     if window > 0:
-        mask &= k_pos > pos - window
-    logits = jnp.where(mask[None, None, None, :], logits,
+        mask &= k_pos[None, :] > posv[:, None] - window
+    logits = jnp.where(mask[:, None, None, :], logits,
                        _ref.NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(v_cache.dtype),
@@ -674,7 +678,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array,
 
     Pallas flash-decoding on TPU (k/v streamed through VMEM once at
     storage dtype, online softmax in scratch); head-grouped einsum with
-    fp32 accumulation elsewhere.  q: (b, hq, d) -> (b, hq, d).
+    fp32 accumulation elsewhere.  q: (b, hq, d) -> (b, hq, d);
+    ``pos``: (b,) per-slot positions (a scalar broadcasts).
     """
     if use_pallas():
         return flash_decode(q, k_cache, v_cache, pos, window=window,

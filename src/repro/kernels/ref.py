@@ -144,9 +144,10 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
                          scale: Optional[float] = None) -> jax.Array:
     """Single-token attention over a cache (flash_decode oracle).
 
-    q: (b, hq, d); caches: (b, S, hkv, d); pos: () int32 — the position
-    just written (slots > pos masked; sliding window masks
-    slots <= pos - window).  Returns (b, hq, d); softmax in fp32.
+    q: (b, hq, d); caches: (b, S, hkv, d); pos: (b,) int32 per-slot
+    positions just written (a scalar broadcasts) — row i masks slots
+    > pos[i]; a sliding window masks slots <= pos[i] - window.
+    Returns (b, hq, d); softmax in fp32.
     """
     b, hq, d = q.shape
     _, skv, hkv, _ = k_cache.shape
@@ -156,11 +157,12 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
     qg = q.reshape(b, hkv, groups, d).astype(jnp.float32) * scale
     kf = k_cache.astype(jnp.float32)
     logits = jnp.einsum("bhgd,bkhd->bhgk", qg, kf)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     k_pos = jnp.arange(skv)
-    mask = k_pos <= pos
+    mask = k_pos[None, :] <= posv[:, None]
     if window > 0:
-        mask &= k_pos > pos - window
-    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+        mask &= k_pos[None, :] > posv[:, None] - window
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", probs,
                      v_cache.astype(jnp.float32))

@@ -1,11 +1,17 @@
-"""Production serving driver: sharded batched decode.
+"""Production serving driver: sharded continuous-batching decode.
 
 Builds the mesh + layout-engine shardings, places (randomly initialized
-or checkpointed) params, and serves batched generation requests through
-:class:`repro.serve.engine.DecodeEngine`.
+or checkpointed) params, and serves generation requests through
+:class:`repro.serve.engine.DecodeEngine` — either a fixed batch
+(``--batch``) or a Poisson-arrival request trace (``--trace N``) that
+exercises the continuous scheduler end-to-end and reports throughput
+plus mean/p99 request latency.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --smoke --batch 4 --prompt-len 32 --steps 16
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --smoke --trace 16 --rate 4 --slots 2 --steps 16
 """
 
 from __future__ import annotations
@@ -21,7 +27,11 @@ from repro.configs.base import get_config, get_smoke_config
 from repro.dist import layout, sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.serve.engine import DecodeEngine
+from repro.serve.engine import DecodeEngine, Request
+
+#: prompt lengths a trace draws from — bucketed so the slot-prefill jit
+#: compiles once per bucket instead of once per request
+TRACE_PROMPT_BUCKETS = (4, 8, 16, 32)
 
 
 def load_params(cfg, mesh, ckpt_dir=None, seed: int = 0,
@@ -46,6 +56,91 @@ def load_params(cfg, mesh, ckpt_dir=None, seed: int = 0,
         return params
 
 
+def make_trace(cfg, n_requests: int, rate: float, max_steps: int,
+               temperature: float, seed: int = 0) -> list:
+    """Poisson-arrival workload: exponential inter-arrival gaps at
+    ``rate`` req/s, prompt lengths from TRACE_PROMPT_BUCKETS, max_tokens
+    uniform in [2, max_steps]."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    arrivals -= arrivals[0]                  # first request at t=0
+    reqs = []
+    for t in arrivals:
+        plen = int(rng.choice(TRACE_PROMPT_BUCKETS))
+        reqs.append(Request(
+            prompt=rng.integers(0, cfg.vocab, (plen,)).astype(np.int32),
+            max_tokens=int(rng.integers(2, max(max_steps, 2) + 1)),
+            temperature=temperature, arrival=float(t)))
+    return reqs
+
+
+def _warmup(engine: DecodeEngine, cfg, prompt_lens,
+            temperature: float = 0.0) -> None:
+    """Compile the slot-prefill for every prompt-length bucket plus the
+    decode step AND the sampling path the trace will use (greedy vs
+    temperature) before any timed work, so reported tokens/sec excludes
+    jit compilation."""
+    rng = np.random.default_rng(1234)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, (int(p),))
+                    .astype(np.int32), max_tokens=2,
+                    temperature=temperature)
+            for p in sorted(set(int(p) for p in prompt_lens))]
+    engine.run(reqs)
+    engine.reset_metrics()
+
+
+def run_trace(engine: DecodeEngine, cfg, args) -> None:
+    reqs = make_trace(cfg, args.trace, args.rate, args.steps,
+                      args.temperature, seed=args.seed)
+    _warmup(engine, cfg, [r.prompt.shape[0] for r in reqs],
+            temperature=args.temperature)
+    t0 = time.perf_counter()
+    results = engine.run(reqs,
+                         now_fn=lambda: time.perf_counter() - t0)
+    dt = time.perf_counter() - t0
+    lat = np.asarray([r.finished_time - r.arrival for r in results])
+    gen = sum(r.n_tokens for r in results)
+    m = engine.metrics
+    print(f"[serve] trace: {len(results)}/{args.trace} requests, "
+          f"{gen} tokens in {dt:.2f}s "
+          f"({gen / dt:.1f} tok/s end-to-end, "
+          f"{engine.tokens_per_sec():.1f} tok/s decode)")
+    print(f"[serve] latency: mean {lat.mean()*1e3:.0f} ms, "
+          f"p99 {np.percentile(lat, 99)*1e3:.0f} ms; "
+          f"slot occupancy {engine.occupancy():.2f} "
+          f"({m['decode_steps']} steps x {engine.n_slots} slots, "
+          f"{m['prefill_tokens']} prompt tokens)")
+
+
+def run_batch(engine: DecodeEngine, cfg, args) -> None:
+    rng = np.random.default_rng(0)
+    prompts = jax.numpy.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+        jax.numpy.int32)
+    frames = None
+    if cfg.family == "audio":
+        frames = jax.numpy.asarray(
+            rng.standard_normal(
+                (args.batch, cfg.encoder_seq, cfg.d_model),
+                dtype=np.float32), cfg.dtype)
+
+    # timing fix: one throwaway generation compiles prefill + step +
+    # sampling, so the timed run (and its tokens/sec) excludes the jit
+    # compile; engine bursts block_until_ready before reading the clock.
+    # max_tokens=2 so at least one decode burst actually runs (a
+    # 1-token request completes at admission without touching _step)
+    engine.generate(prompts, min(2, args.steps + 1), frames=frames)
+    engine.reset_metrics()
+    t0 = time.perf_counter()
+    result = engine.generate(prompts, args.steps, frames=frames)
+    dt = time.perf_counter() - t0
+    tok_s = args.batch * result.steps / dt
+    print(f"[serve] generated {result.steps} steps x {args.batch} seqs "
+          f"in {dt:.2f}s ({tok_s:.1f} tok/s, "
+          f"{engine.tokens_per_sec():.1f} tok/s decode-only)")
+    print("[serve] first sequence:", result.tokens[0][:16], "...")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -56,6 +151,14 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--trace", type=int, default=0,
+                    help="serve N Poisson-arrival requests through the "
+                         "continuous-batching scheduler")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="trace arrival rate (requests/sec)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="cache slots for --trace (default --batch)")
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--int8", action="store_true",
                     help="fused int8 weights, bf16 activations (W8A16)")
     ap.add_argument("--w8a8", action="store_true",
@@ -72,21 +175,17 @@ def main() -> None:
         else get_config(args.arch)
     mesh = make_host_mesh(data=len(jax.devices()))
     params = load_params(cfg, mesh, args.ckpt_dir, int8=args.int8)
-    max_len = args.max_len or (args.prompt_len + args.steps)
-
-    rng = np.random.default_rng(0)
-    prompts = jax.numpy.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
-        jax.numpy.int32)
-    frames = None
-    if cfg.family == "audio":
-        frames = jax.numpy.asarray(
-            rng.standard_normal(
-                (args.batch, cfg.encoder_seq, cfg.d_model),
-                dtype=np.float32), cfg.dtype)
+    n_slots = args.slots or args.batch
+    if args.max_len:
+        max_len = args.max_len
+    elif args.trace:
+        # trace prompts come from the buckets; +1 slack for warm-up
+        max_len = max(TRACE_PROMPT_BUCKETS) + max(args.steps, 2)
+    else:
+        max_len = args.prompt_len + args.steps
 
     with shd.use_mesh(mesh):
-        engine = DecodeEngine(params, cfg, batch=args.batch,
+        engine = DecodeEngine(params, cfg, batch=n_slots,
                               max_len=max_len,
                               temperature=args.temperature)
         bpt = engine.modeled_bytes_per_token()
@@ -94,15 +193,12 @@ def main() -> None:
             ("w8a16" if args.int8 else "bf16")
         print(f"[serve] {mode}: modeled GEMM weight stream "
               f"{bpt / 2**20:.1f} MiB/step "
-              f"({bpt / args.batch / 2**20:.2f} MiB per seq-token "
-              f"at batch {args.batch})")
-        t0 = time.time()
-        result = engine.generate(prompts, args.steps, frames=frames)
-        dt = time.time() - t0
-    tok_s = args.batch * result.steps / dt
-    print(f"[serve] generated {result.steps} steps x {args.batch} seqs "
-          f"in {dt:.2f}s ({tok_s:.1f} tok/s)")
-    print("[serve] first sequence:", result.tokens[0][:16], "...")
+              f"({bpt / n_slots / 2**20:.2f} MiB per seq-token "
+              f"at {n_slots} slots)")
+        if args.trace:
+            run_trace(engine, cfg, args)
+        else:
+            run_batch(engine, cfg, args)
 
 
 if __name__ == "__main__":

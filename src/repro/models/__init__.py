@@ -6,4 +6,5 @@ from repro.models.transformer import (  # noqa: F401
     init_params,
     loss_fn,
     prefill,
+    prefill_into_slot,
 )

@@ -210,25 +210,36 @@ def init_kv_cache(batch: int, max_len: int, spec: AttnSpec, dtype) -> dict:
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def scatter_rows(cache: jax.Array, new: jax.Array, idx: jax.Array
+                 ) -> jax.Array:
+    """Per-row dynamic insertion: row ``i`` of ``cache`` (b, S, ...) takes
+    ``new[i]`` (1, ...) at sequence position ``idx[i]`` — the per-slot
+    write primitive of continuous batching, where every batch row decodes
+    at its own position."""
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+            c, n, i, axis=0))(cache, new, idx)
+
+
 def attention_decode(params: dict, x: jax.Array, cache: dict,
                      pos: jax.Array, spec: AttnSpec,
                      residual: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, dict]:
-    """Single-step decode: insert this step's k/v at ``pos`` (scalar int32)
-    and attend over the cache with position masking (+ sliding window).
+    """Single-step decode: insert each row's k/v at its own position
+    ``pos`` ((b,) int32, scalar broadcasts) and attend over the cache
+    with per-row position masking (+ sliding window).
 
     x: (b, 1, d).  Returns (out (b, 1, d), new cache); ``residual`` fuses
     the residual-stream add into the output projection.
     """
     b, s, _ = x.shape
     assert s == 1
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
     q, k_new, v_new = _project_qkv(params, x, spec, positions)
 
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos,
-                                                  axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos,
-                                                  axis=1)
+    k_cache = scatter_rows(cache["k"], k_new, pos)
+    v_cache = scatter_rows(cache["v"], v_new, pos)
     # pin the cache values inside the layer loop: without this, CPU
     # XLA's bf16-dot legalization hoists a convert of the ENTIRE stacked
     # cache out of the scan and maintains a second full-precision copy

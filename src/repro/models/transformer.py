@@ -50,9 +50,16 @@ def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
 
 def _maybe_abs_pos(cfg: ModelConfig, x: jax.Array, start: jax.Array | int
                    ) -> jax.Array:
+    """``start`` may be a scalar (whole batch at one offset — train /
+    prefill) or a (b,) per-slot vector (continuous-batching decode, each
+    row at its own position)."""
     if cfg.use_rope:
         return x
     s, d = x.shape[1], x.shape[2]
+    start = jnp.asarray(start)
+    if start.ndim == 1:
+        pos = jnp.arange(s)[None, :] + start[:, None]       # (b, s)
+        return x + _sinusoid(pos, d).astype(x.dtype)
     pos = jnp.arange(s) + start
     return x + _sinusoid(pos, d)[None].astype(x.dtype)
 
@@ -293,7 +300,11 @@ def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
-    cache: Dict = {"pos": jnp.zeros((), jnp.int32), "layers": {}}
+    """``pos`` is a (batch,) per-slot position vector: every batch slot
+    decodes at its own position (the continuous-batching cache
+    contract), so a freshly admitted request can sit next to one that is
+    hundreds of tokens into its generation."""
+    cache: Dict = {"pos": jnp.zeros((batch,), jnp.int32), "layers": {}}
 
     def stack(make):
         return jax.vmap(lambda _: make())(jnp.arange(cfg.repeats))
@@ -322,7 +333,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
 
 def _sliding_pos(cfg: ModelConfig, kind: str, pos: jax.Array,
                  cache_max: int) -> jax.Array:
-    """Ring-buffer write position for bounded (windowed) caches."""
+    """Ring-buffer write position for bounded (windowed) caches.
+    Elementwise, so a (b,) per-slot position vector maps to (b,) ring
+    write positions."""
     return jnp.remainder(pos, cache_max)
 
 
@@ -369,14 +382,16 @@ def _decode_ring(p, cache, spec: L.AttnSpec, x, pos, wpos,
                  residual=None):
     """Windowed decode against a ring-buffer cache of size <= window:
     every resident entry is in-window by construction, so attention masks
-    only un-written slots."""
+    only un-written slots.  ``pos``/``wpos`` are (b,) per-slot vectors —
+    each row writes at its own ring offset and masks at its own
+    fill level."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    wpos = jnp.broadcast_to(jnp.asarray(wpos, jnp.int32), (b,))
+    positions = pos[:, None]
     q, k_new, v_new = L._project_qkv(p["attn"], x, spec, positions)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, wpos,
-                                                  axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, wpos,
-                                                  axis=1)
+    k_cache = L.scatter_rows(cache["k"], k_new, wpos)
+    v_cache = L.scatter_rows(cache["v"], v_new, wpos)
     groups = spec.n_heads // spec.n_kv_heads
     cache_max = k_cache.shape[1]
     # bf16 operands + fp32 accumulation: never materialize an f32 cache
@@ -385,9 +400,9 @@ def _decode_ring(p, cache, spec: L.AttnSpec, x, pos, wpos,
                         preferred_element_type=jnp.float32) \
         * spec.head_dim ** -0.5
     slot = jnp.arange(cache_max)
-    written = slot <= pos                     # before first wrap
-    written |= pos >= cache_max               # after wrap: all slots valid
-    logits = jnp.where(written[None, None, None, None, :], logits,
+    written = slot[None, :] <= pos[:, None]   # before first wrap
+    written |= pos[:, None] >= cache_max      # after wrap: all slots valid
+    logits = jnp.where(written[:, None, None, None, :], logits,
                        jnp.float32(-1e30))
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v_cache.dtype),
@@ -401,8 +416,13 @@ def _decode_ring(p, cache, spec: L.AttnSpec, x, pos, wpos,
 def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
                 cache: dict) -> Tuple[jax.Array, dict]:
     """One decode step.  token: (b, 1) int32.  Returns (logits (b, V),
-    updated cache)."""
-    pos = cache["pos"]
+    updated cache).
+
+    ``cache["pos"]`` is (b,): every batch slot decodes at its own
+    position, so one compiled step serves a continuous batch of requests
+    at arbitrary phases of their generations."""
+    pos = jnp.broadcast_to(jnp.asarray(cache["pos"], jnp.int32),
+                           (token.shape[0],))
     x = L.embed(params["embed"], token)
     x = _maybe_abs_pos(cfg, x, pos)
     kinds = cfg.layer_pattern
@@ -553,7 +573,7 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
     xs = (params["layers"], cache["layers"], cross)
     x, new_layer_cache = jax.lax.scan(unit, x, xs)
     new_cache = dict(cache, layers=new_layer_cache,
-                     pos=jnp.asarray(s_total, jnp.int32))
+                     pos=jnp.full((tokens.shape[0],), s_total, jnp.int32))
     if cfg.tail_pattern:
         new_tail = {}
         for i, kind in enumerate(cfg.tail_pattern):
@@ -566,3 +586,55 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
     if cross is not None:
         new_cache["cross"] = cross
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Slot-targeted prefill (continuous batching)
+# ---------------------------------------------------------------------------
+
+def _cache_batch_dim(path, leaf) -> int:
+    """Batch axis of one cache leaf: leaves under the scanned ``layers``
+    / ``cross`` subtrees are stacked (repeats, batch, ...); ``tail`` and
+    ``pos`` leaves carry batch at dim 0 (mirrors
+    :func:`repro.dist.layout.cache_specs`)."""
+    keys = [str(p.key) for p in path
+            if isinstance(p, jax.tree_util.DictKey)]
+    stacked = bool(keys) and keys[0] in ("layers", "cross")
+    return 1 if stacked and leaf.ndim >= 2 else 0
+
+
+def insert_cache_slot(live: dict, sub: dict, slot: jax.Array) -> dict:
+    """Scatter a batch-1 cache into batch row ``slot`` of a live
+    multi-slot cache (``jax.lax.dynamic_update_slice`` on every leaf's
+    batch dim) — resident slots are untouched."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def one(path, leaf, subleaf):
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, subleaf.astype(leaf.dtype), slot,
+            axis=_cache_batch_dim(path, leaf))
+
+    return jax.tree_util.tree_map_with_path(one, live, sub)
+
+
+def prefill_into_slot(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                      cache: dict, slot: jax.Array, *, max_len: int,
+                      prefix_embeds=None, frames=None
+                      ) -> Tuple[jax.Array, dict]:
+    """Admit ONE request into slot ``slot`` of a live multi-slot cache.
+
+    The (1, s) prompt prefills a fresh batch-1 cache, and every leaf —
+    k/v, ring/conv/SSM states, the per-slot ``pos`` — is scattered into
+    the slot's batch row; resident slots keep decoding from exactly the
+    state they had (no re-prefill).  Stale entries beyond the new
+    request's length are invisible by construction: decode masks cache
+    positions > ``pos[slot]`` and overwrites them sequentially.
+
+    Returns (last-token logits (1, V), updated cache).  ``slot`` may be
+    traced, so one compiled prefill per prompt length serves every slot.
+    """
+    assert tokens.shape[0] == 1, "slot prefill admits one request"
+    fresh = init_cache(cfg, 1, max_len)
+    logits, sub = prefill(params, cfg, tokens, fresh,
+                          prefix_embeds=prefix_embeds, frames=frames)
+    return logits, insert_cache_slot(cache, sub, slot)

@@ -1,16 +1,36 @@
-"""Batched decode engine: continuous batched requests over a shared KV
-cache, greedy or temperature sampling.
+"""Continuous-batching decode engine: per-slot KV positions from the
+scheduler down to the flash-decode kernel.
 
-The serving counterpart of the trainer: jitted prefill + decode_step with
-cache donation; per-sequence completion masking so a batch of requests
-with different prompt/target lengths decodes together (the 'batched
-requests' end-to-end driver the task sheet asks for).
+The old engine was a lockstep static batch — one scalar ``cache["pos"]``
+shared by every sequence, so a single long request held its whole batch
+hostage and short prompts padded to the longest.  This engine is a
+scheduler over a fixed pool of cache *slots*:
+
+* a request queue feeds a :class:`SlotScheduler` (pure-host allocator,
+  property-tested in isolation);
+* admission prefills ONE request into a free slot of the live cache
+  (:func:`repro.models.transformer.prefill_into_slot` — resident slots
+  are untouched, ``jax.lax.dynamic_update_*`` on every cache leaf);
+* every batched ``decode_step`` advances all slots at their own
+  positions (the ``(b,)`` ``cache["pos"]`` contract, masked per-row all
+  the way down to the flash-decode kernel);
+* per-slot sampling params (temperature / eos / max_tokens), per-slot
+  completion + eviction, and rolling tokens/sec + slot-occupancy
+  metrics.
+
+Host syncs are amortized: decode runs in bursts of up to
+``EOS_CHECK_EVERY`` steps (bounded by the tightest remaining
+``max_tokens``, so length-based completions are exact); EOS is detected
+at burst boundaries and any tokens sampled after it are masked before a
+result is returned.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional
+import time
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,72 +40,420 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
 
-@dataclasses.dataclass
-class GenerationResult:
-    tokens: np.ndarray            # (b, steps) generated ids
-    steps: int
-
-
-# EOS completion is checked on the host only every this-many steps:
-# a per-token ``bool(jnp.all(done))`` would force a device->host sync
-# every decode step and serialize the jitted step stream.  Generated
-# tokens and ``done`` both stay on device between checks; the trade is
-# up to EOS_CHECK_EVERY-1 extra (masked-out) steps after the last
-# sequence finishes.
+# EOS completion is checked on the host only every this-many steps: a
+# per-token ``bool(done)`` would force a device->host sync every decode
+# step and serialize the jitted step stream.  Bursts are additionally
+# capped by the smallest remaining max_tokens among active slots, so
+# length-based completions (and the admissions they unblock) land on
+# the exact step; the trade is up to EOS_CHECK_EVERY-1 wasted (masked)
+# steps after an EOS.
 EOS_CHECK_EVERY = 8
 
 
+#: the ragged acceptance trace — (prompt_len, max_tokens) pairs — that
+#: tests/test_serve.py and benchmarks/serve_bench.py both pin: every
+#: request must decode bit-identically to a solo batch-1 greedy run
+ACCEPTANCE_TRACE = ((4, 8), (16, 32), (8, 16), (32, 4))
+
+
+def acceptance_requests(vocab: int, seed: int = 0) -> List["Request"]:
+    """Materialize the acceptance trace as requests (shared by
+    tests/test_serve.py and benchmarks/serve_bench.py so both always
+    exercise the same trace)."""
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, vocab, (p,))
+                    .astype(np.int32), max_tokens=mt)
+            for p, mt in ACCEPTANCE_TRACE]
+
+
+def solo_greedy(params, cfg: ModelConfig, prompt: np.ndarray,
+                max_tokens: int, max_len: int) -> np.ndarray:
+    """The parity oracle: one request alone at batch 1, greedy —
+    prefill then token-by-token decode.  The continuous engine must
+    reproduce this bit-for-bit for greedy requests."""
+    cache = T.init_cache(cfg, 1, max_len)
+    logits, cache = T.prefill(params, cfg,
+                              jnp.asarray(prompt[None], jnp.int32),
+                              cache)
+    step = jax.jit(lambda t, c: T.decode_step(params, cfg, t, c))
+    toks = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for _ in range(max_tokens):
+        toks.append(int(tok[0, 0]))
+        logits, cache = step(tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return np.asarray(toks, np.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side)."""
+    prompt: np.ndarray                   # (s,) int32 prompt token ids
+    max_tokens: int
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    arrival: float = 0.0                 # seconds since trace start
+    frames: Optional[np.ndarray] = None  # (F, d) audio stub frames
+    rid: int = -1                        # assigned by submit()
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray                   # generated ids (EOS-terminated)
+    admitted_step: int                   # engine decode-step counters
+    finished_step: int
+    arrival: float                       # request arrival (trace clock)
+    admitted_time: float                 # wall clock, engine-relative
+    finished_time: float
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """Compat result for :meth:`DecodeEngine.generate`."""
+    tokens: np.ndarray                   # (b, steps) generated ids
+    steps: int
+
+
+class SlotScheduler:
+    """Pure-host slot allocator: FIFO request queue over ``n_slots``
+    cache slots.  No device state — the invariants (every queued request
+    is admitted exactly once, a slot never serves two live requests) are
+    property-tested in isolation (tests/test_serve.py)."""
+
+    def __init__(self, n_slots: int):
+        assert n_slots >= 1
+        self.n_slots = n_slots
+        self.queue: Deque[int] = collections.deque()
+        self.slot_rid: List[Optional[int]] = [None] * n_slots
+        self._free: List[int] = list(range(n_slots))
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    @property
+    def active_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_rid) if r is not None]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def submit(self, rid: int) -> None:
+        self.queue.append(rid)
+
+    def admit(self) -> Optional[tuple]:
+        """Pop (slot, rid) when a slot is free and a request is queued;
+        None otherwise.  Lowest free slot first (deterministic)."""
+        if not self.queue or not self._free:
+            return None
+        slot = min(self._free)
+        self._free.remove(slot)
+        rid = self.queue.popleft()
+        assert self.slot_rid[slot] is None, "slot double-booked"
+        self.slot_rid[slot] = rid
+        return slot, rid
+
+    def release(self, slot: int) -> int:
+        rid = self.slot_rid[slot]
+        assert rid is not None, "releasing a free slot"
+        self.slot_rid[slot] = None
+        self._free.append(slot)
+        return rid
+
+
+@dataclasses.dataclass
+class _SlotState:
+    """Host-side decode state of one occupied slot."""
+    req: Request
+    gen: List[int]                       # synced generated token ids
+    first_dev: Optional[jax.Array]       # prefill-sampled token (device)
+    remaining: int                       # decode steps left (max_tokens-1
+    admitted_step: int                   # ... minus steps already run)
+    admitted_time: float
+
+
 class DecodeEngine:
+    """Continuous-batching serving engine.
+
+    ``batch`` is the slot-pool size (kept under its legacy name — each
+    slot is one resident sequence of the live cache); ``temperature`` /
+    ``eos_id`` are engine-level defaults that per-request values
+    override.
+    """
+
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
                  max_len: int, temperature: float = 0.0,
                  eos_id: Optional[int] = None):
         self.params = params
         self.cfg = cfg
-        self.batch = batch
+        self.n_slots = self.batch = batch
         self.max_len = max_len
         self.temperature = temperature
         self.eos_id = eos_id
-        self._prefill = jax.jit(
-            lambda p, toks, cache, frames: T.prefill(
-                p, cfg, toks, cache, frames=frames))
+
+        self._prefill_slot = jax.jit(
+            lambda p, toks, cache, slot, frames: T.prefill_into_slot(
+                p, cfg, toks, cache, slot, max_len=max_len,
+                frames=frames),
+            donate_argnums=(2,))
         self._step = jax.jit(
             lambda p, tok, cache: T.decode_step(p, cfg, tok, cache),
             donate_argnums=(2,))
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        self._sample_temp = jax.jit(self._sample_temp_impl)
 
-    def _sample(self, logits: jax.Array, key) -> jax.Array:
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.temperature)[:, None].astype(jnp.int32)
+        self._requests: Dict[int, Request] = {}
+        self._sched = SlotScheduler(self.n_slots)
+        self._state: Dict[int, _SlotState] = {}      # slot -> state
+        self._next_rid = 0
+        self._cache = None
+        self._tok = jnp.zeros((self.n_slots, 1), jnp.int32)
+        self._temps = np.zeros((self.n_slots,), np.float32)
+        self._key = jax.random.PRNGKey(0)
+        self.reset_metrics()
+
+    # ------------------------------------------------------------ sampling
+
+    @staticmethod
+    def _sample_temp_impl(logits, key, temps):
+        """Per-slot sampling: greedy rows where temperature == 0,
+        categorical at ``logits / temp`` elsewhere — one batched op."""
+        greedy = jnp.argmax(logits, axis=-1)
+        scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+        sampled = jax.random.categorical(key, scaled, axis=-1)
+        return jnp.where(temps > 0, sampled, greedy).astype(jnp.int32)
+
+    def _sample(self, logits: jax.Array, temps: np.ndarray) -> jax.Array:
+        """logits: (n, V) -> (n,) int32 tokens."""
+        if not (temps > 0).any():
+            return self._argmax(logits)
+        self._key, sub = jax.random.split(self._key)
+        return self._sample_temp(logits, sub, jnp.asarray(temps))
+
+    # ------------------------------------------------------------- metrics
+
+    def reset_metrics(self) -> None:
+        self.metrics = {
+            "decode_steps": 0,           # batched decode_step calls
+            "useful_slot_steps": 0,      # sum over steps of active slots
+            "prefill_tokens": 0,         # exact prompt tokens prefilled
+            "generated_tokens": 0,       # tokens in returned results
+            "completed": 0,
+            "decode_time": 0.0,          # wall seconds inside bursts
+        }
+
+    def occupancy(self) -> float:
+        """Mean fraction of slots serving a live request per decode
+        step — the utilization the lockstep engine wasted."""
+        steps = self.metrics["decode_steps"]
+        if steps == 0:
+            return 0.0
+        return self.metrics["useful_slot_steps"] / (steps * self.n_slots)
+
+    def tokens_per_sec(self) -> float:
+        """Rolling decode throughput (generated tokens over wall time
+        spent in decode bursts; prefill + jit compile excluded)."""
+        t = self.metrics["decode_time"]
+        return self.metrics["generated_tokens"] / t if t > 0 else 0.0
+
+    # ----------------------------------------------------------- lifecycle
+
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its rid (admission order = FIFO)."""
+        # the last generated token is sampled but never written back, so
+        # a request occupies cache positions 0..prompt+max_tokens-2;
+        # past max_len the per-row write clamps (silently overwriting
+        # the last slot) while the mask keeps admitting the whole cache
+        # — reject instead of decoding garbage
+        need = int(req.prompt.shape[0]) + req.max_tokens - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions "
+                f"(prompt {int(req.prompt.shape[0])} + max_tokens "
+                f"{req.max_tokens} - 1) but the engine was built with "
+                f"max_len={self.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req.rid = rid
+        self._requests[rid] = req
+        self._sched.submit(rid)
+        return rid
+
+    def _ensure_cache(self) -> None:
+        if self._cache is None:
+            self._cache = T.init_cache(self.cfg, self.n_slots,
+                                       self.max_len)
+
+    def _admit(self, slot: int, req: Request, now: float) -> None:
+        """Prefill the request into ``slot`` of the live cache and seed
+        its first sampled token."""
+        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+        frames = None if req.frames is None \
+            else jnp.asarray(req.frames[None])
+        logits, self._cache = self._prefill_slot(
+            self.params, toks, self._cache, jnp.asarray(slot, jnp.int32),
+            frames)
+        temp = np.float32(req.temperature)
+        first = self._sample(logits, temp[None])         # (1,)
+        self._tok = self._tok.at[slot, 0].set(first[0])
+        self._temps[slot] = temp
+        self.metrics["prefill_tokens"] += int(req.prompt.shape[0])
+        self._state[slot] = _SlotState(
+            req=req, gen=[], first_dev=first[0],
+            remaining=req.max_tokens - 1,
+            admitted_step=self.metrics["decode_steps"],
+            admitted_time=now)
+
+    def _finish(self, slot: int, now: float) -> RequestResult:
+        """Truncate at EOS / max_tokens, emit the result, free the slot
+        (and drop the engine's reference to the request — a long-lived
+        engine must not accumulate served prompts/results).
+
+        Tokens sampled after EOS (a slot keeps stepping until the burst
+        boundary) are dropped here — a result never contains post-EOS
+        garbage."""
+        st = self._state.pop(slot)
+        req = st.req
+        toks = st.gen[:req.max_tokens]
+        eos = req.eos_id
+        if eos is not None and eos in toks:
+            toks = toks[:toks.index(eos) + 1]
+        self._temps[slot] = 0.0
+        self._sched.release(slot)
+        self._requests.pop(req.rid, None)
+        self.metrics["generated_tokens"] += len(toks)
+        self.metrics["completed"] += 1
+        return RequestResult(
+            rid=req.rid, prompt_len=int(req.prompt.shape[0]),
+            tokens=np.asarray(toks, np.int32),
+            admitted_step=st.admitted_step,
+            finished_step=self.metrics["decode_steps"],
+            arrival=req.arrival,
+            admitted_time=st.admitted_time, finished_time=now)
+
+    def _sync_slot(self, slot: int, burst_host: Optional[np.ndarray],
+                   col: Optional[int]) -> None:
+        """Pull this burst's tokens for one slot into host state."""
+        st = self._state[slot]
+        if st.first_dev is not None:
+            st.gen.append(int(st.first_dev))
+            st.first_dev = None
+        if burst_host is not None:
+            st.gen.extend(int(t) for t in burst_host[:, col])
+
+    def _slot_done(self, slot: int) -> bool:
+        st = self._state[slot]
+        if len(st.gen) >= st.req.max_tokens:
+            return True
+        eos = st.req.eos_id
+        return eos is not None and eos in st.gen
+
+    def run(self, requests: Optional[List[Request]] = None, *,
+            now_fn: Optional[Callable[[], float]] = None,
+            poll: float = 0.001) -> List[RequestResult]:
+        """Drain the queue (plus ``requests``, submitted first) through
+        the slot pool; returns results in completion order.
+
+        ``now_fn`` is the trace clock (seconds since trace start) gating
+        admissions by ``Request.arrival``; without it every queued
+        request is immediately admittable.  ``poll`` is the idle sleep
+        while all slots are free and the next arrival is in the future.
+        """
+        for req in requests or ():
+            self.submit(req)
+        self._ensure_cache()
+        now = now_fn or (lambda: float("inf"))
+        t_run0 = time.perf_counter()
+        done: List[RequestResult] = []
+
+        while self._sched.has_work():
+            # ---- admissions: fill every free slot with an arrived req
+            while self._sched.queue and self._sched._free and \
+                    self._requests[self._sched.queue[0]].arrival <= now():
+                slot, rid = self._sched.admit()
+                req = self._requests[rid]
+                self._admit(slot, req, time.perf_counter() - t_run0)
+                if req.max_tokens <= 1:
+                    self._sync_slot(slot, None, None)
+                    done.append(self._finish(
+                        slot, time.perf_counter() - t_run0))
+
+            active = self._sched.active_slots
+            if not active:
+                if self._sched.queue:
+                    time.sleep(poll)       # waiting on the next arrival
+                continue
+
+            # ---- decode burst: exact to the tightest max_tokens,
+            #      EOS checked at the boundary
+            k = min([EOS_CHECK_EVERY]
+                    + [self._state[s].remaining for s in active])
+            burst: List[jax.Array] = []
+            t_burst0 = time.perf_counter()
+            for _ in range(max(k, 1)):
+                logits, self._cache = self._step(self.params, self._tok,
+                                                 self._cache)
+                samp = self._sample(logits, self._temps)
+                self._tok = samp[:, None]
+                burst.append(samp)
+            jax.block_until_ready(self._tok)
+            self.metrics["decode_time"] += time.perf_counter() - t_burst0
+            self.metrics["decode_steps"] += len(burst)
+            self.metrics["useful_slot_steps"] += len(burst) * len(active)
+            for s in active:
+                self._state[s].remaining -= len(burst)
+
+            # ---- sync + completions
+            host = np.asarray(jnp.stack(burst, axis=0))   # (k, n_slots)
+            for s in active:
+                self._sync_slot(s, host, s)
+                if self._slot_done(s):
+                    done.append(self._finish(
+                        s, time.perf_counter() - t_run0))
+
+        return done
+
+    # -------------------------------------------------- compat interface
 
     def generate(self, prompts: jax.Array, n_steps: int,
                  frames: Optional[jax.Array] = None,
                  seed: int = 0) -> GenerationResult:
-        """prompts: (b, s) int32.  Returns n_steps generated tokens."""
-        b = prompts.shape[0]
-        assert b == self.batch
-        cache = T.init_cache(self.cfg, b, self.max_len)
-        logits, cache = self._prefill(self.params, prompts, cache, frames)
-        key = jax.random.PRNGKey(seed)
-        out = []                  # device-resident (b,) token slices
-        done = jnp.zeros((b,), bool)
-        tok = self._sample(logits, key)
-        for i in range(n_steps):
-            out.append(tok[:, 0])
-            if self.eos_id is not None:
-                done = done | (tok[:, 0] == self.eos_id)
-                if (i + 1) % EOS_CHECK_EVERY == 0 \
-                        and bool(jnp.all(done)):
-                    break
-            logits, cache = self._step(self.params, tok, cache)
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits, sub)
-        return GenerationResult(
-            tokens=np.asarray(jnp.stack(out, axis=1)), steps=len(out))
+        """Lockstep-compatible front end: prompts (b, s) int32, up to
+        ``n_steps`` tokens each, returned as a dense (b, steps) array.
+        Rows that finish early (EOS) are padded with ``eos_id`` —
+        post-EOS samples never leak into the result.
+
+        Each row admits through the per-request batch-1 slot prefill
+        (b small dispatches instead of the old single (b, s) batched
+        prefill) — the deliberate trade for a cache that requests can
+        enter and leave independently; decode runs fully batched."""
+        self._key = jax.random.PRNGKey(seed)
+        prompts_np = np.asarray(prompts)
+        frames_np = None if frames is None else np.asarray(frames)
+        reqs = [Request(prompt=prompts_np[i], max_tokens=n_steps,
+                        temperature=self.temperature, eos_id=self.eos_id,
+                        frames=None if frames_np is None
+                        else frames_np[i])
+                for i in range(prompts_np.shape[0])]
+        results = {r.rid: r for r in self.run(reqs)}
+        ordered = [results[req.rid] for req in reqs]
+        steps = max(r.n_tokens for r in ordered)
+        fill = self.eos_id if self.eos_id is not None else 0
+        out = np.full((len(ordered), steps), fill, np.int32)
+        for i, r in enumerate(ordered):
+            out[i, :r.n_tokens] = r.tokens
+        return GenerationResult(tokens=out, steps=steps)
 
     def modeled_bytes_per_token(self) -> int:
         """Modeled HBM weight traffic of ONE batched decode step (the
-        whole batch shares it): every GEMM projection leaf streams
+        whole slot pool shares it): every GEMM projection leaf streams
         through VMEM once per step, at its storage width — one
         byte/element + scale vector for fused-int8 weights, two for
         bf16.  This is the term the mixed-precision path halves."""

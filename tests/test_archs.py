@@ -78,7 +78,9 @@ def test_prefill_plus_decode_matches_forward(arch):
     np.testing.assert_allclose(np.asarray(got),
                                np.asarray(want, np.float32),
                                rtol=2e-3, atol=2e-3)
-    assert int(cache["pos"]) == SEQ
+    # per-slot (b,) position vector: every slot sits at SEQ after prefill
+    assert cache["pos"].shape == (BATCH,)
+    assert np.all(np.asarray(cache["pos"]) == SEQ)
 
 
 def test_vlm_prefix_loss_masks_prefix():

@@ -93,7 +93,8 @@ def test_cache_specs_shard_seq_over_model():
     k_spec = specs["layers"]["u0"]["k"]
     # (repeats, batch, seq, kv_heads, head_dim)
     assert k_spec == P(None, "data", "model", None, None)
-    assert specs["pos"] == P()
+    # per-slot (batch,) decode positions row-shard with their slots
+    assert specs["pos"] == P("data")
 
 
 def test_cache_specs_tail_unstacked():

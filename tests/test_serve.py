@@ -1,5 +1,7 @@
-"""Serving-path tests: batched engine semantics, greedy consistency,
-EOS masking, and ring-buffer windowed decode far past the window."""
+"""Serving-path tests: continuous-batching engine semantics (ragged
+traces bit-identical to solo batch-1 decode, slot-targeted prefill,
+EOS masking, scheduler invariants), greedy consistency, and ring-buffer
+windowed decode far past the window."""
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +12,9 @@ from repro.configs.base import get_smoke_config
 from repro.kernels import ref
 from repro.models import layers as L
 from repro.models import transformer as T
-from repro.serve.engine import DecodeEngine
+from repro.serve.engine import (ACCEPTANCE_TRACE, DecodeEngine, Request,
+                                SlotScheduler, acceptance_requests,
+                                solo_greedy)
 
 
 def test_engine_greedy_matches_forward_argmax():
@@ -78,6 +82,184 @@ def test_windowed_cache_is_bounded():
     cache = T.init_cache(cfg, 1, max_len=4096)
     k = cache["layers"]["u0"]["k"]
     assert k.shape[2] == cfg.window        # ring buffer, not 4096
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+def test_ragged_trace_bit_identical_to_solo_batch1():
+    """The acceptance trace (prompt lens 4/16/8/32, max_tokens
+    8/32/16/4) on a 2-slot continuous engine: every request's tokens
+    are bit-identical to running it alone at batch 1 (greedy), and
+    slots turn over (4 requests through 2 slots)."""
+    cfg = get_smoke_config("smollm-360m")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = max(p + mt for p, mt in ACCEPTANCE_TRACE) + 1
+    reqs = acceptance_requests(cfg.vocab)
+    engine = DecodeEngine(params, cfg, batch=2, max_len=max_len)
+    results = {r.rid: r for r in engine.run(reqs)}
+    assert len(results) == len(reqs)
+    for req in reqs:
+        want = solo_greedy(params, cfg, req.prompt, req.max_tokens,
+                            max_len)
+        got = results[req.rid].tokens
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"rid {req.rid}")
+    # occupancy beats lockstep-with-2-slots on this trace
+    assert engine.occupancy() > 0.8
+    assert engine.metrics["prefill_tokens"] == \
+        sum(p for p, _ in ACCEPTANCE_TRACE)
+
+
+def test_ragged_trace_windowed_ring_bit_identical():
+    """Per-slot positions through the ring-buffer windowed cache: two
+    requests of different lengths decode past the window together on a
+    2-slot engine, each bit-identical to its solo batch-1 run (each row
+    writes at its own ring offset and masks at its own fill level)."""
+    cfg = get_smoke_config("h2o-danube-3-4b")           # window = 32
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    lens, mts = (8, 24), (40, 20)                       # 8+40 > window
+    max_len = 72
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, (p,))
+                    .astype(np.int32), max_tokens=mt)
+            for p, mt in zip(lens, mts)]
+    engine = DecodeEngine(params, cfg, batch=2, max_len=max_len)
+    results = {r.rid: r for r in engine.run(reqs)}
+    for req in reqs:
+        want = solo_greedy(params, cfg, req.prompt, req.max_tokens,
+                            max_len)
+        np.testing.assert_array_equal(results[req.rid].tokens, want,
+                                      err_msg=f"rid {req.rid}")
+
+
+def test_prefill_into_slot_preserves_resident_slots():
+    """Admitting into slot 1 must not perturb slot 0's cache rows or
+    position."""
+    cfg = get_smoke_config("smollm-360m")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    cache = T.init_cache(cfg, 2, 32)
+    p0 = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    p1 = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+    _, cache = T.prefill_into_slot(params, cfg, p0, cache, 0, max_len=32)
+    before = jax.tree.map(lambda x: np.asarray(x), cache)
+    _, cache = T.prefill_into_slot(params, cfg, p1, cache, 1, max_len=32)
+    after = jax.tree.map(lambda x: np.asarray(x), cache)
+    assert int(after["pos"][0]) == 8 and int(after["pos"][1]) == 12
+    k_b, k_a = before["layers"]["u0"]["k"], after["layers"]["u0"]["k"]
+    np.testing.assert_array_equal(k_b[:, 0], k_a[:, 0])   # slot 0 intact
+    assert np.any(k_a[:, 1] != k_b[:, 1])                 # slot 1 written
+
+
+def test_post_eos_tokens_are_masked():
+    """A slot decodes past EOS until the burst boundary; the returned
+    tokens must stop at EOS (satellite: no post-EOS garbage) and the
+    compat (b, steps) array pads with eos_id."""
+    cfg = get_smoke_config("smollm-360m")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab)
+    h, _ = T.forward(params, cfg, prompts)
+    eos = int(jnp.argmax(h[:, -1] @ params["lm_head"], -1)[0])
+    engine = DecodeEngine(params, cfg, batch=2, max_len=32, eos_id=eos)
+    reqs = [Request(prompt=np.asarray(prompts[i]), max_tokens=12,
+                    eos_id=eos) for i in range(2)]
+    results = {r.rid: r for r in engine.run(reqs)}
+    r0 = results[reqs[0].rid].tokens
+    assert r0[-1] == eos and eos not in r0[:-1]
+    # compat path: rows finishing early pad with eos_id, never garbage
+    res = engine.generate(prompts, 12)
+    row = res.tokens[0]
+    first_eos = int(np.argmax(row == eos))
+    assert np.all(row[first_eos:] == eos)
+
+
+def test_per_slot_sampling_params():
+    """Greedy and temperature requests share one batch: the greedy
+    slot's tokens stay bit-identical to a solo greedy run."""
+    cfg = get_smoke_config("smollm-360m")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    pg = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    pt = rng.integers(0, cfg.vocab, (8,)).astype(np.int32)
+    engine = DecodeEngine(params, cfg, batch=2, max_len=32)
+    reqs = [Request(prompt=pg, max_tokens=6, temperature=0.0),
+            Request(prompt=pt, max_tokens=6, temperature=1.0)]
+    results = {r.rid: r for r in engine.run(reqs)}
+    want = solo_greedy(params, cfg, pg, 6, 32)
+    np.testing.assert_array_equal(results[reqs[0].rid].tokens, want)
+    assert results[reqs[1].rid].n_tokens == 6
+
+
+# ------------------------------------------------------ scheduler invariants
+
+def test_slot_scheduler_fifo_and_reuse():
+    s = SlotScheduler(2)
+    for rid in range(4):
+        s.submit(rid)
+    assert s.admit() == (0, 0) and s.admit() == (1, 1)
+    assert s.admit() is None                  # no free slot
+    assert s.release(0) == 0
+    assert s.admit() == (0, 2)                # lowest free slot, FIFO rid
+    s.release(1)
+    s.release(0)
+    assert s.admit() == (0, 3)
+    s.release(0)
+    assert not s.has_work()
+
+
+def test_slot_scheduler_properties():
+    """Property (hypothesis): under any interleaving of submissions and
+    completions, every queued request is admitted exactly once, no slot
+    serves two live requests, and the queue drains."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(n_slots=st.integers(1, 4), n_reqs=st.integers(0, 24),
+           data=st.data())
+    @settings(max_examples=60, deadline=None)
+    def check(n_slots, n_reqs, data):
+        sched = SlotScheduler(n_slots)
+        admitted, completed = [], []
+        submitted = 0
+        while len(completed) < n_reqs:
+            can_submit = submitted < n_reqs
+            act = data.draw(st.sampled_from(
+                (["submit"] if can_submit else [])
+                + ["admit"] + (["release"] if sched.n_active else [])))
+            if act == "submit":
+                sched.submit(submitted)
+                submitted += 1
+            elif act == "admit":
+                got = sched.admit()
+                if got is not None:
+                    slot, rid = got
+                    admitted.append(rid)
+                    # no slot serves two live requests
+                    live = [r for r in sched.slot_rid if r is not None]
+                    assert len(live) == len(set(live))
+            else:
+                slot = data.draw(st.sampled_from(sched.active_slots))
+                completed.append(sched.release(slot))
+            # drain: force progress when everything is submitted
+            if submitted == n_reqs and not sched.queue \
+                    and sched.n_active == 0 and len(completed) < n_reqs:
+                break
+        # every submission is admitted exactly once, FIFO
+        while sched.has_work():
+            got = sched.admit()
+            if got is not None:
+                admitted.append(got[1])
+                completed.append(sched.release(got[0]))
+            elif sched.n_active:
+                completed.append(sched.release(sched.active_slots[0]))
+        assert sorted(admitted) == list(range(submitted))
+        assert len(admitted) == len(set(admitted))
+        assert sorted(completed) == list(range(submitted))
+
+    check()
 
 
 def test_decode_attention_ref_vs_full_attention():
