@@ -1,14 +1,16 @@
 """Wall-clock GEMM micro-benchmark (CPU host).
 
-Times the public ``ops.gemm`` dispatch path (reference/XLA on this CPU
-container) against raw ``jnp.dot`` to confirm the kernel layer adds no
-dispatch overhead, plus the Pallas kernels in interpret mode on a small
-shape for functional parity.  Real kernel throughput numbers come from
-the roofline analysis (the container has no TPU).
+Times the public planned ``ops.gemm`` dispatch path (reference/XLA on
+this CPU container) against raw ``jnp.dot`` to confirm the spec/plan/
+execute layer adds no dispatch overhead, plus the Pallas kernels in
+interpret mode on a small shape for functional parity.  Real kernel
+throughput numbers come from the roofline analysis (the container has
+no TPU).
 
 Also writes ``BENCH_gemm.json`` (rows + the fused-vs-unfused SwiGLU
-modeled-HBM ratios) so the perf trajectory is machine-readable across
-PRs; the pallas-interpret CI job uploads it as an artifact.
+modeled-HBM ratios + the plan-cache counters proving the DSE resolves
+once per unique spec+shape); the pallas-interpret CI job uploads it as
+an artifact.
 """
 
 from __future__ import annotations
@@ -21,12 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import quant
+from repro import ops, quant
 from repro.core import dse
 from repro.core.bandwidth import estimate
 from repro.core.hardware import TPU_V5E
 from repro.core.tiling import GemmProblem, TileConfig
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_gemm.json")
 
@@ -41,15 +43,28 @@ def _time(fn, *args, iters: int = 5) -> float:
 
 
 def run(report) -> None:
+    ops.plan_cache_clear()       # so the cache rows below are exact
     key = jax.random.PRNGKey(0)
     m = k = n = 1024
     a = jax.random.normal(key, (m, k), jnp.float32).astype(jnp.bfloat16)
     b = jax.random.normal(key, (k, n), jnp.float32).astype(jnp.bfloat16)
 
-    gemm_jit = jax.jit(lambda a, b: ops.gemm(a, b))
-    dot_jit = jax.jit(lambda a, b: jnp.dot(a, b))
-    t_gemm = _time(gemm_jit, a, b)
-    t_dot = _time(dot_jit, a, b)
+    # dispatch-overhead row: the spec/plan/execute layer must lower to
+    # the identical XLA dot, so pin the reference path — under an
+    # interpret-mode env this row would time the interpreted kernel,
+    # which measures the interpreter, not the dispatch layer
+    prev_mode = os.environ.get("REPRO_KERNELS")
+    os.environ["REPRO_KERNELS"] = "ref"
+    try:
+        gemm_jit = jax.jit(lambda a, b: ops.gemm(a, b))
+        dot_jit = jax.jit(lambda a, b: jnp.dot(a, b))
+        t_gemm = _time(gemm_jit, a, b)
+        t_dot = _time(dot_jit, a, b)
+    finally:
+        if prev_mode is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = prev_mode
     flops = 2.0 * m * k * n
     # identical lowering expected: within noise of each other
     ok = t_gemm < 3 * t_dot
@@ -82,10 +97,12 @@ def run(report) -> None:
         else:
             os.environ["REPRO_KERNELS"] = prev_mode
 
-    # int8 quantized path (the paper's precision scheme)
+    # int8 path (the paper's precision scheme) through the planned API:
+    # int8 x int8 spec, int32 accumulation, scales applied outside
     aq, ascale = ops.quantize_int8(a[:256, :256])          # (m,1) rows
     bq, bscale = ops.quantize_int8(b[:256, :256], axis=0)  # (1,n) cols
-    got = ops.gemm_int8(jnp.asarray(aq), jnp.asarray(bq), ascale, bscale)
+    acc = ops.gemm(jnp.asarray(aq), jnp.asarray(bq), out_dtype=jnp.int32)
+    got = (acc.astype(jnp.float32) * ascale * bscale)
     want = jnp.dot(a[:256, :256].astype(jnp.float32),
                    b[:256, :256].astype(jnp.float32))
     rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
@@ -130,7 +147,7 @@ def run(report) -> None:
                ratio=f"{hbm8/hbm16:.2f}", ok=hbm8 <= 0.6 * hbm16)
 
     # ------------------------------------------------ fused-MLP rows
-    # wall-clock: fused SwiGLU dispatch (gated + epilogue ops) vs the
+    # wall-clock: fused SwiGLU dispatch (gated + epilogue specs) vs the
     # unfused three-GEMM + XLA-silu composition, public ops path
     d_m, d_ff = 512, 1536
     x = jax.random.normal(key, (4, 64, d_m), jnp.float32)
@@ -142,8 +159,8 @@ def run(report) -> None:
                            jnp.float32)
 
     def fused_mlp(x):
-        h = ops.gemm_gated(x, wg, wu)
-        return ops.gemm_fused(h, wd, residual=x)
+        h = ops.gemm(x, wg, b2=wu, activation="silu")
+        return ops.gemm(h, wd, residual=x)
 
     def unfused_mlp(x):
         gate = ops.gemm(x, wg)
@@ -165,9 +182,10 @@ def run(report) -> None:
     os.environ["REPRO_KERNELS"] = "interpret"
     try:
         xs = x[0, :16].astype(jnp.bfloat16)
-        got = ops.gemm_gated(xs, wg[:, :256].astype(jnp.bfloat16),
-                             wu[:, :256].astype(jnp.bfloat16),
-                             tile=TileConfig(16, 128, 128, "aie"))
+        got = ops.gemm(xs, wg[:, :256].astype(jnp.bfloat16),
+                       b2=wu[:, :256].astype(jnp.bfloat16),
+                       activation="silu",
+                       tile=TileConfig(16, 128, 128, "aie"))
         zg = ref.gemm_ref(xs, wg[:, :256].astype(jnp.bfloat16),
                           out_dtype=jnp.float32)
         zu = ref.gemm_ref(xs, wu[:, :256].astype(jnp.bfloat16),
@@ -208,9 +226,27 @@ def run(report) -> None:
                    fused_mib=f"{fu[comp]/2**20:.1f}",
                    ratio=f"{ratio:.2f}", ok=ratio <= thresh)
 
+    # --------------------------------------------- plan-cache counters
+    # Repeated shapes must HIT the spec+shape plan cache: the DSE ran
+    # once per unique (spec, shape) across everything above, and three
+    # more decode-shaped calls below add exactly one miss.
+    info0 = ops.plan_cache_info()
+    xd = jax.random.normal(key, (16, 1024), jnp.bfloat16)
+    wd16 = jax.random.normal(key, (1024, 1024), jnp.bfloat16)
+    for _ in range(3):
+        ops.gemm(xd, wd16)
+    info = ops.plan_cache_info()
+    ok = (info.entries == info0.entries + 1
+          and info.hits >= info0.hits + 2
+          and info.misses == info.entries)
+    report.row("gemm", "plan cache (DSE once per unique spec+shape)",
+               entries=info.entries, hits=info.hits,
+               misses=info.misses, ok=ok)
+
     with open(BENCH_JSON, "w") as f:
         json.dump({"rows": report.rows, "swiglu_fused_hbm": ratios,
-                   "w8a16_decode_hbm_ratio": round(hbm8 / hbm16, 4)},
+                   "w8a16_decode_hbm_ratio": round(hbm8 / hbm16, 4),
+                   "plan_cache": info._asdict()},
                   f, indent=2, default=str)
     report.row("gemm", "bench json", path=BENCH_JSON, ok=True)
 

@@ -3,8 +3,11 @@
 1.  Solve the reuse-maximizing tiling DSE for a GEMM (the paper's IP
     formulation on the TPU memory hierarchy) and inspect the ranked
     designs — the Table III/IV analogue.
-2.  Run the GEMM through the public kernel API (Pallas on TPU,
-    bit-identical reference elsewhere).
+2.  Run GEMMs through the declarative operator API: a ``GemmSpec``
+    describes the problem, ``plan`` resolves strategy/tile/modeled
+    bytes once (introspectable via ``plan.explain()``), ``execute``
+    runs it (Pallas on TPU, bit-identical reference elsewhere) — or
+    the one-shot ``ops.gemm`` that composes all three.
 3.  Reproduce a slice of the paper's own analytical results (Versal
     Table III row 1 / Stratix Table IV row 1).
 
@@ -14,9 +17,9 @@
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 from repro.core import dse, paper_model as pm
 from repro.core.tiling import GemmProblem
-from repro.kernels import ops
 
 
 def main() -> None:
@@ -41,27 +44,35 @@ def main() -> None:
     print(f"decode 16x4096x4096 modeled HBM: bf16 {h16/2**20:.1f} MiB "
           f"-> W8A16 {h8/2**20:.1f} MiB ({h8/h16:.0%})")
 
-    # -- 2. the kernel API --------------------------------------------
+    # -- 2. the declarative operator API ------------------------------
     key = jax.random.PRNGKey(0)
     a = jax.random.normal(key, (512, 1024), jnp.bfloat16)
     b = jax.random.normal(key, (1024, 768), jnp.bfloat16)
-    c = ops.gemm(a, b)                       # DSE-tiled Pallas on TPU
-    print(f"\nops.gemm: {a.shape} @ {b.shape} -> {c.shape} {c.dtype}")
 
-    aq, asc = ops.quantize_int8(a)           # the paper's int8 scheme
+    # spec -> plan -> execute, with the plan introspectable
+    spec = ops.GemmSpec.for_operands(a, b)
+    plan = ops.plan(spec, ops.gemm_shapes(a, b))
+    c = ops.execute(plan, a, b)
+    print(f"\n{plan.explain()}")
+    print(f"execute: {a.shape} @ {b.shape} -> {c.shape} {c.dtype}")
+
+    # the paper's int8 scheme as a spec: int8 operands, int32
+    # accumulation, dequant scales applied outside
+    aq, asc = ops.quantize_int8(a)
     bq, bsc = ops.quantize_int8(b, axis=0)
-    c8 = ops.gemm_int8(aq, bq, asc, bsc)
+    acc = ops.gemm(aq, bq, out_dtype=jnp.int32)
+    c8 = acc.astype(jnp.float32) * asc * bsc
     rel = float(jnp.linalg.norm(c8 - c.astype(jnp.float32))
                 / jnp.linalg.norm(c.astype(jnp.float32)))
     print(f"int8 path rel err vs bf16: {rel:.3f}")
 
-    # fused-epilogue + dual-B gated kernels: a whole SwiGLU up-projection
+    # fused-epilogue + dual-B gated specs: a whole SwiGLU up-projection
     # in one call — act(A Wg) * (A Wu) with A streamed once, and the
     # down-projection absorbing the residual add on its flush
     wg = jax.random.normal(jax.random.PRNGKey(1), (1024, 768),
                            jnp.bfloat16)
-    h = ops.gemm_gated(a, wg, b, activation="silu")
-    y = ops.gemm_fused(h, wg.T, residual=a)
+    h = ops.gemm(a, wg, b2=b, activation="silu")
+    y = ops.gemm(h, wg.T, residual=a)
     print(f"gated SwiGLU: {a.shape} -> {h.shape} -> {y.shape} "
           f"(gate/up intermediates stay in VMEM)")
     ratios = dse.mlp_traffic(16, 4096, 14336, fused=True, residual=True)
@@ -70,6 +81,9 @@ def main() -> None:
           f"{unf['activations']/2**20:.1f} -> "
           f"{ratios['activations']/2**20:.1f} MiB "
           f"({ratios['activations']/unf['activations']:.0%})")
+    info = ops.plan_cache_info()
+    print(f"plan cache: {info.entries} entries, {info.hits} hits, "
+          f"{info.misses} misses (DSE ran once per unique spec+shape)")
 
     # -- 3. the paper's own numbers -----------------------------------
     sol = pm.MAXEVA_P1

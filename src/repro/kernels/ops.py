@@ -1,615 +1,73 @@
-"""Public, jit-friendly kernel API — every model GEMM routes through here.
+"""Legacy kernel entrypoints + the attention dispatch layer.
 
-Dispatch policy (the hardware-adaptation contract):
+The GEMM family moved to the declarative planned API in
+:mod:`repro.kernels.api` (``GemmSpec`` -> ``plan`` -> ``execute``,
+re-exported as :mod:`repro.ops`): one spec describes operands /
+quantization / epilogue / gating, one cached plan resolves the DSE tile
+and modeled costs, one generic custom VJP executes it.  The four
+pre-redesign entrypoints below (``gemm``, ``gemm_fused``, ``gemm_gated``,
+``gemm_int8``) remain as thin deprecated shims that build the equivalent
+spec and delegate — bit-identical results, plus a ``DeprecationWarning``
+so stragglers surface under ``-W error::DeprecationWarning``.
 
-* On TPU (or when ``REPRO_KERNELS=interpret`` forces Pallas-interpret for
-  tests) the Pallas kernels run, with block shapes chosen by the
-  reuse-maximizing DSE (:mod:`repro.core.dse`) unless a ``tile`` is given.
-* Elsewhere (this CPU container, dry-runs) the mathematically identical
-  pure-jnp reference path runs, so models/training/serving behave the
-  same everywhere and the multi-pod dry-run lowers pure XLA.
-
-``gemm`` carries a custom VJP (dA = dC Bᵀ, dB = Aᵀ dC, both routed back
-through ``gemm``) so the Pallas forward is trainable.
-
-Quantized ``{"q", "scale"}`` weight structs route to the *fused* kernels
-(int8 B streamed at one byte/element, dequantized in-register — never
-pre-dequantized on the forward path); their custom VJP dequantizes only
-in the backward, so serving stays forward-only at 1-byte weight traffic.
-
-Fused epilogues: ``gemm_fused`` applies bias / activation / residual on
-the kernels' accumulator flush (the full-width intermediate never
-touches HBM), and ``gemm_gated`` computes ``act(A W_gate) * (A W_up)``
-in ONE Pallas call with a single resident A stream.  Both carry custom
-VJPs whose backward falls back to the unfused composition (recompute the
-pre-activation, then the standard GEMM cotangents).  Note on the dynamic
-W8A8 activation mode: a linear epilogue (bias/residual only) commutes
-with the per-row activation scale, so it keeps the int8 x int8 MXU path
-with the epilogue applied outside; a nonlinear epilogue does not, so
-those GEMMs serve quantized weights as fused W8A16.
+Attention stays here (it is not part of the GEMM plan space): Pallas
+flash kernels on TPU, blocked/reference XLA paths elsewhere, same
+``REPRO_KERNELS`` mode contract as the GEMM layer.
 """
 
 from __future__ import annotations
 
-import functools
-import os
-from typing import Optional
+import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import quant as _quant
-from repro.core import dse
-from repro.core.tiling import TileConfig, round_up
+from repro.kernels import api
 from repro.kernels import ref as _ref
+from repro.kernels.api import _interpret, _mode, use_pallas  # noqa: F401
 from repro.kernels.blocked_attention import attention_blocked
-from repro.kernels.epilogue import ACTIVATIONS, Epilogue
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode
-from repro.kernels.gemm_aie import gemm_aie
-from repro.kernels.gemm_gated import gemm_gated as _gemm_gated_kernel
-from repro.kernels.gemm_tb import feasible_bk, gemm_tb
 
 
-def _mode() -> str:
-    env = os.environ.get("REPRO_KERNELS", "auto")
-    if env in ("interpret", "ref", "pallas"):
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{name} is deprecated; use repro.ops "
+        "(GemmSpec / plan / execute, or the one-shot repro.ops.gemm)",
+        DeprecationWarning, stacklevel=3)
 
 
-def use_pallas() -> bool:
-    return _mode() in ("pallas", "interpret")
-
-
-def _interpret() -> bool:
-    return _mode() == "interpret"
-
-
-def _pad2(x, m_to, n_to):
-    m, n = x.shape
-    if m == m_to and n == n_to:
-        return x
-    return jnp.pad(x, ((0, m_to - m), (0, n_to - n)))
-
-
-def _clamp_tile(tile: TileConfig, m: int, k: int, n: int) -> TileConfig:
-    bm = min(tile.bm, round_up(m, 8))
-    bk = min(tile.bk, round_up(k, 128))
-    bn = min(tile.bn, round_up(n, 128))
-    return TileConfig(bm, bk, bn, tile.strategy)
-
-
-def _tb_viable(tile: TileConfig, m: int, k: int, n: int, a_dtype,
-               b_dtype, out_dtype, ep_key: str = "") -> TileConfig:
-    """Feasibility gate (satellite): a 'tb' tile keeps a (bm, bk) A block
-    VMEM-resident; ``gemm_tb`` refines the k-chunking when that busts,
-    but when even bk=128 is infeasible (the (bm, bn) blocks themselves
-    over-subscribe VMEM) fall back to the DSE's 'aie' winner instead of
-    dispatching a kernel that cannot fit.  ``ep_key`` bills any fused
-    bias/residual blocks on both sides of the gate."""
-    if tile.strategy != "tb":
-        return tile
-    acc = jnp.int32 if a_dtype == jnp.int8 else jnp.float32
-    if feasible_bk(round_up(m, tile.bm), round_up(k, tile.bk),
-                   round_up(n, tile.bn), tile, a_dtype, b_dtype,
-                   out_dtype, acc, epilogue=ep_key) > 0:
-        return tile
-    b_key = "int8" if b_dtype == jnp.int8 else None
-    t = dse.best_tile(m, k, n, str(a_dtype), str(jnp.dtype(out_dtype)),
-                      str(jnp.dtype(acc)), strategy="aie", b_dtype=b_key,
-                      epilogue=ep_key)
-    return _clamp_tile(t, m, k, n)
-
-
-def _gemm_pallas(a: jax.Array, b: jax.Array, tile: TileConfig,
-                 out_dtype, *, b_scale: Optional[jax.Array] = None,
-                 bias: Optional[jax.Array] = None,
-                 residual: Optional[jax.Array] = None,
-                 out_scale: Optional[jax.Array] = None,
-                 activation: Optional[str] = None) -> jax.Array:
-    """Pad to tile multiples, dispatch the aie/tb kernel (with any fused
-    dequant-scale / epilogue operands padded alongside), slice back."""
-    m, k = a.shape
-    _, n = b.shape
-    tile = _clamp_tile(tile, m, k, n)
-    ep_key = Epilogue.from_args(bias, activation, residual,
-                                out_scale).key
-    tile = _tb_viable(tile, m, k, n, a.dtype, b.dtype,
-                      out_dtype or jnp.float32, ep_key)
-    bm, bk, bn = tile.bm, tile.bk, tile.bn
-    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
-    ap = _pad2(a, mp, kp)
-    bp = _pad2(b, kp, np_)
-    sp = None
-    if b_scale is not None:
-        sp = b_scale if np_ == n else jnp.pad(
-            b_scale, ((0, 0), (0, np_ - n)), constant_values=1.0)
-        sp = sp.astype(jnp.float32)
-    biasp = _pad2(bias, 1, np_) if bias is not None else None
-    resp = _pad2(residual, mp, np_) if residual is not None else None
-    fn = gemm_aie if tile.strategy == "aie" else gemm_tb
-    out = fn(ap, bp, tile=tile, out_dtype=out_dtype, b_scale=sp,
-             bias=biasp, residual=resp, out_scale=out_scale,
-             activation=activation, interpret=_interpret())
-    return out[:m, :n]
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _gemm2d(a: jax.Array, b: jax.Array, strategy: Optional[str],
-            tile: Optional[TileConfig], out_dtype) -> jax.Array:
-    if use_pallas():
-        t = tile
-        if t is None:
-            (m, k), n = a.shape, b.shape[1]
-            t = dse.best_tile(m, k, n, str(a.dtype),
-                              str(jnp.dtype(out_dtype)), strategy=strategy)
-        return _gemm_pallas(a, b, t, out_dtype)
-    return _ref.gemm_ref(a, b, out_dtype=out_dtype)
-
-
-def _gemm2d_fwd(a, b, strategy, tile, out_dtype):
-    return _gemm2d(a, b, strategy, tile, out_dtype), (a, b)
-
-
-def _gemm2d_bwd(strategy, tile, out_dtype, res, g):
-    a, b = res
-    g = g.astype(a.dtype)
-    da = _gemm2d(g, b.T, strategy, None, a.dtype)
-    db = _gemm2d(a.T, g, strategy, None, b.dtype)
-    return da.astype(a.dtype), db.astype(b.dtype)
-
-
-_gemm2d.defvjp(_gemm2d_fwd, _gemm2d_bwd)
-
-
-def _gemm_q_pallas(a: jax.Array, q: jax.Array, scale: jax.Array,
-                   tile: TileConfig, out_dtype) -> jax.Array:
-    """Pad + run a fused weight-dequant Pallas kernel (b_scale path)."""
-    return _gemm_pallas(a, q, tile, out_dtype, b_scale=scale)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _gemm2d_q(a: jax.Array, q: jax.Array, scale: jax.Array,
-              strategy: Optional[str], tile: Optional[TileConfig],
-              out_dtype) -> jax.Array:
-    """C = A @ (q * scale) without materializing the dequantized weight:
-    the kernel streams int8 q and applies the per-output-channel scale
-    to the accumulator."""
-    if use_pallas():
-        t = tile
-        if t is None:
-            (m, k), n = a.shape, q.shape[1]
-            acc = "int32" if a.dtype == jnp.int8 else "float32"
-            t = dse.best_tile(m, k, n, str(a.dtype),
-                              str(jnp.dtype(out_dtype)), acc,
-                              strategy=strategy, b_dtype="int8")
-        return _gemm_q_pallas(a, q, scale, t, out_dtype)
-    return _ref.gemm_fused_ref(a, q, scale, out_dtype=out_dtype)
-
-
-def _gemm2d_q_fwd(a, q, scale, strategy, tile, out_dtype):
-    return _gemm2d_q(a, q, scale, strategy, tile, out_dtype), \
-        (a, q, scale)
-
-
-def _gemm2d_q_bwd(strategy, tile, out_dtype, res, g):
-    # The ONLY place the weight is dequantized — the forward path never
-    # pays 2-byte weight traffic.  Quantized weights are serving
-    # artifacts: they get no gradient (int8 cotangent is float0).
-    a, q, scale = res
-    if a.dtype == jnp.int8:
-        da = np.zeros(a.shape, jax.dtypes.float0)
-    else:
-        w = (q.astype(jnp.float32) * scale).astype(a.dtype)
-        da = _gemm2d(g.astype(a.dtype), w.T, strategy, None,
-                     a.dtype).astype(a.dtype)
-    dq = np.zeros(q.shape, jax.dtypes.float0)
-    dscale = jnp.zeros_like(scale)
-    return da, dq, dscale
-
-
-_gemm2d_q.defvjp(_gemm2d_q_fwd, _gemm2d_q_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Fused-epilogue GEMM (bias / activation / residual on the flush)
-# ---------------------------------------------------------------------------
-
-def _ep_tile(m: int, k: int, n: int, a_dtype, out_dtype, ep_key: str,
-             strategy: Optional[str], b_dtype: Optional[str] = None,
-             n_b: int = 1) -> TileConfig:
-    acc = "int32" if a_dtype == jnp.int8 else "float32"
-    return dse.best_tile(m, k, n, str(a_dtype), str(jnp.dtype(out_dtype)),
-                         acc, strategy=strategy, b_dtype=b_dtype,
-                         epilogue=ep_key, n_b_operands=n_b)
-
-
-def _act_bwd(activation: Optional[str], z: jax.Array, g: jax.Array
-             ) -> jax.Array:
-    """dL/dz given dL/d(act(z)) — the unfused-composition backward."""
-    if activation is None:
-        return g
-    _, vjp = jax.vjp(ACTIVATIONS[activation], z)
-    return vjp(g)[0]
-
-
-def _ep_dispatch(a2: jax.Array, b2: jax.Array, scale, bias, residual,
-                 out_scale, activation: Optional[str],
-                 strategy: Optional[str], tile: Optional[TileConfig],
-                 out_dtype) -> jax.Array:
-    """The one pallas/ref fan-out every epilogue path shares: pick the
-    DSE tile for the real (epilogue-billed) footprint, run the fused
-    kernel, or fall back to the jnp reference composition off-TPU.
-    ``scale`` is the quantized-weight dequant vector (None for plain B).
-    """
-    if use_pallas():
-        t = tile
-        if t is None:
-            (m, k), n = a2.shape, b2.shape[1]
-            ep_key = Epilogue.from_args(bias, activation, residual,
-                                        out_scale).key
-            t = _ep_tile(m, k, n, a2.dtype, out_dtype, ep_key, strategy,
-                         b_dtype="int8" if scale is not None else None)
-        return _gemm_pallas(a2, b2, t, out_dtype, b_scale=scale,
-                            bias=bias, residual=residual,
-                            out_scale=out_scale, activation=activation)
-    return _ref.gemm_epilogue_ref(a2, b2, b_scale=scale, bias=bias,
-                                  activation=activation,
-                                  residual=residual, out_scale=out_scale,
-                                  out_dtype=out_dtype)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
-def _gemm2d_ep(a: jax.Array, b: jax.Array, bias, residual,
-               activation: Optional[str], strategy: Optional[str],
-               tile: Optional[TileConfig], out_dtype) -> jax.Array:
-    """C = epilogue(A @ B): bias (1, n) add, activation, residual (m, n)
-    add — applied to the fp32 accumulator inside the kernel flush."""
-    return _ep_dispatch(a, b, None, bias, residual, None, activation,
-                        strategy, tile, out_dtype)
-
-
-def _gemm2d_ep_fwd(a, b, bias, residual, activation, strategy, tile,
-                   out_dtype):
-    out = _gemm2d_ep(a, b, bias, residual, activation, strategy, tile,
-                     out_dtype)
-    return out, (a, b, bias, residual)
-
-
-def _gemm2d_ep_bwd(activation, strategy, tile, out_dtype, res, g):
-    # Unfused-composition fallback: recompute the pre-activation z (one
-    # extra GEMM — rematerialization, not HBM round-trips), then the
-    # standard cotangents through the elementwise epilogue.
-    a, b, bias, residual = res
-    gf = g.astype(jnp.float32)
-    dres = gf.astype(residual.dtype) if residual is not None else None
-    if activation is not None:
-        z = _gemm2d(a, b, strategy, None, jnp.dtype(jnp.float32))
-        if bias is not None:
-            z = z + bias.astype(jnp.float32)
-        dz = _act_bwd(activation, z, gf)
-    else:
-        dz = gf
-    dbias = jnp.sum(dz, axis=0, keepdims=True).astype(bias.dtype) \
-        if bias is not None else None
-    dzc = dz.astype(a.dtype)
-    da = _gemm2d(dzc, b.T, strategy, None, a.dtype).astype(a.dtype)
-    db = _gemm2d(a.T, dzc, strategy, None, b.dtype).astype(b.dtype)
-    return da, db, dbias, dres
-
-
-_gemm2d_ep.defvjp(_gemm2d_ep_fwd, _gemm2d_ep_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
-def _gemm2d_ep_q(a: jax.Array, q: jax.Array, scale: jax.Array, bias,
-                 residual, activation: Optional[str],
-                 strategy: Optional[str], tile: Optional[TileConfig],
-                 out_dtype) -> jax.Array:
-    """Fused-epilogue GEMM against a quantized weight: the int8 block
-    streams at one byte/element, the per-output-channel scale applies to
-    the accumulator on the flush, and the epilogue follows — still a
-    single C write."""
-    return _ep_dispatch(a, q, scale, bias, residual, None, activation,
-                        strategy, tile, out_dtype)
-
-
-def _gemm2d_ep_q_fwd(a, q, scale, bias, residual, activation, strategy,
-                     tile, out_dtype):
-    out = _gemm2d_ep_q(a, q, scale, bias, residual, activation, strategy,
-                       tile, out_dtype)
-    return out, (a, q, scale, bias, residual)
-
-
-def _gemm2d_ep_q_bwd(activation, strategy, tile, out_dtype, res, g):
-    # Quantized weights are serving artifacts: the weight is dequantized
-    # only here, and q/scale get no gradient (like _gemm2d_q_bwd).
-    a, q, scale, bias, residual = res
-    gf = g.astype(jnp.float32)
-    dres = gf.astype(residual.dtype) if residual is not None else None
-    if activation is not None:
-        z = _gemm2d_q(a, q, scale, strategy, None,
-                      jnp.dtype(jnp.float32))
-        if bias is not None:
-            z = z + bias.astype(jnp.float32)
-        dz = _act_bwd(activation, z, gf)
-    else:
-        dz = gf
-    dbias = jnp.sum(dz, axis=0, keepdims=True).astype(bias.dtype) \
-        if bias is not None else None
-    if a.dtype == jnp.int8:
-        da = np.zeros(a.shape, jax.dtypes.float0)
-    else:
-        w = (q.astype(jnp.float32) * scale).astype(a.dtype)
-        da = _gemm2d(dz.astype(a.dtype), w.T, strategy, None,
-                     a.dtype).astype(a.dtype)
-    dq = np.zeros(q.shape, jax.dtypes.float0)
-    dscale = jnp.zeros_like(scale)
-    return da, dq, dscale, dbias, dres
-
-
-_gemm2d_ep_q.defvjp(_gemm2d_ep_q_fwd, _gemm2d_ep_q_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Dual-B gated GEMM (SwiGLU core): act(A W_gate) * (A W_up) in one call
-# ---------------------------------------------------------------------------
-
-def _gated_pallas(a, bg, bu, tile, out_dtype, activation,
-                  sg=None, su=None) -> jax.Array:
-    m, k = a.shape
-    _, n = bg.shape
-    tile = _clamp_tile(tile, m, k, n)
-    bm, bk, bn = tile.bm, tile.bk, tile.bn
-    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
-    ap = _pad2(a, mp, kp)
-    bgp, bup = _pad2(bg, kp, np_), _pad2(bu, kp, np_)
-    if sg is not None and np_ != n:
-        pad = ((0, 0), (0, np_ - n))
-        sg = jnp.pad(sg, pad, constant_values=1.0)
-        su = jnp.pad(su, pad, constant_values=1.0)
-    out = _gemm_gated_kernel(ap, bgp, bup, tile=tile,
-                             activation=activation, out_dtype=out_dtype,
-                             bg_scale=sg, bu_scale=su,
-                             interpret=_interpret())
-    return out[:m, :n]
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _gemm2d_gated(a: jax.Array, bg: jax.Array, bu: jax.Array,
-                  activation: str, tile: Optional[TileConfig],
-                  out_dtype) -> jax.Array:
-    if use_pallas():
-        t = tile
-        if t is None:
-            (m, k), n = a.shape, bg.shape[1]
-            t = _ep_tile(m, k, n, a.dtype, out_dtype, activation, None,
-                         n_b=2)
-        return _gated_pallas(a, bg, bu, t, out_dtype, activation)
-    return _ref.gemm_gated_ref(a, bg, bu, activation=activation,
-                               out_dtype=out_dtype)
-
-
-def _gemm2d_gated_fwd(a, bg, bu, activation, tile, out_dtype):
-    return _gemm2d_gated(a, bg, bu, activation, tile, out_dtype), \
-        (a, bg, bu)
-
-
-def _gemm2d_gated_bwd(activation, tile, out_dtype, res, g):
-    # Unfused composition: zg = A Wg, zu = A Wu, h = act(zg) * zu.
-    a, bg, bu = res
-    gf = g.astype(jnp.float32)
-    zg = _gemm2d(a, bg, None, None, jnp.dtype(jnp.float32))
-    zu = _gemm2d(a, bu, None, None, jnp.dtype(jnp.float32))
-    dzu = gf * ACTIVATIONS[activation](zg)
-    dzg = _act_bwd(activation, zg, gf * zu)
-    dzgc, dzuc = dzg.astype(a.dtype), dzu.astype(a.dtype)
-    da = (_gemm2d(dzgc, bg.T, None, None, a.dtype)
-          + _gemm2d(dzuc, bu.T, None, None, a.dtype)).astype(a.dtype)
-    dbg = _gemm2d(a.T, dzgc, None, None, bg.dtype).astype(bg.dtype)
-    dbu = _gemm2d(a.T, dzuc, None, None, bu.dtype).astype(bu.dtype)
-    return da, dbg, dbu
-
-
-_gemm2d_gated.defvjp(_gemm2d_gated_fwd, _gemm2d_gated_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
-def _gemm2d_gated_q(a: jax.Array, qg: jax.Array, sg: jax.Array,
-                    qu: jax.Array, su: jax.Array, activation: str,
-                    tile: Optional[TileConfig], out_dtype) -> jax.Array:
-    if use_pallas():
-        t = tile
-        if t is None:
-            (m, k), n = a.shape, qg.shape[1]
-            t = _ep_tile(m, k, n, a.dtype, out_dtype, activation, None,
-                         b_dtype="int8", n_b=2)
-        return _gated_pallas(a, qg, qu, t, out_dtype, activation,
-                             sg=sg, su=su)
-    return _ref.gemm_gated_ref(a, qg, qu, activation=activation,
-                               bg_scale=sg, bu_scale=su,
-                               out_dtype=out_dtype)
-
-
-def _gemm2d_gated_q_fwd(a, qg, sg, qu, su, activation, tile, out_dtype):
-    out = _gemm2d_gated_q(a, qg, sg, qu, su, activation, tile, out_dtype)
-    return out, (a, qg, sg, qu, su)
-
-
-def _gemm2d_gated_q_bwd(activation, tile, out_dtype, res, g):
-    a, qg, sg, qu, su = res
-    gf = g.astype(jnp.float32)
-    if a.dtype == jnp.int8:
-        da = np.zeros(a.shape, jax.dtypes.float0)
-    else:
-        zg = _gemm2d_q(a, qg, sg, None, None, jnp.dtype(jnp.float32))
-        zu = _gemm2d_q(a, qu, su, None, None, jnp.dtype(jnp.float32))
-        dzu = gf * ACTIVATIONS[activation](zg)
-        dzg = _act_bwd(activation, zg, gf * zu)
-        wg = (qg.astype(jnp.float32) * sg).astype(a.dtype)
-        wu = (qu.astype(jnp.float32) * su).astype(a.dtype)
-        da = (_gemm2d(dzg.astype(a.dtype), wg.T, None, None, a.dtype)
-              + _gemm2d(dzu.astype(a.dtype), wu.T, None, None,
-                        a.dtype)).astype(a.dtype)
-    return (da, np.zeros(qg.shape, jax.dtypes.float0),
-            jnp.zeros_like(sg), np.zeros(qu.shape, jax.dtypes.float0),
-            jnp.zeros_like(su))
-
-
-_gemm2d_gated_q.defvjp(_gemm2d_gated_q_fwd, _gemm2d_gated_q_bwd)
-
-
-def gemm_fused(a: jax.Array, b, *, bias: Optional[jax.Array] = None,
-               activation: Optional[str] = None,
-               residual: Optional[jax.Array] = None,
-               out_scale: Optional[jax.Array] = None,
-               strategy: Optional[str] = None,
-               tile: Optional[TileConfig] = None,
-               out_dtype=None) -> jax.Array:
-    """C = epilogue(A @ B) with the epilogue fused into the kernel flush.
-
-    ``a``: (..., k); ``b``: (k, n) array or quantized ``{"q", "scale"}``
-    struct.  ``bias``: (n,) or (1, n); ``residual``: same shape as the
-    output (the pre-attention/pre-MLP x of a transformer residual
-    stream); ``activation``: "silu" | "gelu" | "relu", computed in fp32
-    on the accumulator.  ``out_scale`` (scalar-like, forward-only)
-    additionally quantizes the epilogue output to int8.
-
-    With no epilogue operands this degenerates to :func:`gemm` (same
-    dispatch, same VJP).  W8A8 dynamic activation quantization: a
-    *linear* epilogue (bias/residual, no activation) commutes with the
-    per-row scale applied after the int8 x int8 GEMM, so it keeps the
-    int8 MXU path — the epilogue then runs as XLA ops on the fp32
-    dequantized output (the fusion is traded for the cheaper
-    multiplies).  A *nonlinear* epilogue cannot (the scale would have to
-    be applied inside the kernel before the activation), so those GEMMs
-    serve quantized weights as fused W8A16.
-    """
-    if bias is None and activation is None and residual is None \
-            and out_scale is None:
-        return gemm(a, b, strategy=strategy, tile=tile,
+def gemm(a, b, *, strategy=None, tile=None, out_dtype=None):
+    """Deprecated shim: C = A @ B through the planned GemmSpec API
+    (``b`` may be a ``{"q", "scale"}`` int8 weight struct)."""
+    _warn("gemm")
+    return api.gemm(a, b, strategy=strategy, tile=tile,
                     out_dtype=out_dtype)
-    quantized = isinstance(b, dict) and {"q", "scale"} <= set(b)
-    if quantized and activation is None and out_scale is None \
-            and _quant.activation_mode() == "w8a8" \
-            and a.dtype != jnp.int8:
-        # linear epilogue + w8a8: keep the int8 x int8 / int32 MXU path
-        # (the decode-dominant wo / down projections); the scaled fp32
-        # output then takes bias/residual outside the kernel.
-        out = gemm(a, b, strategy=strategy, tile=tile,
-                   out_dtype=jnp.float32)
-        if bias is not None:
-            out = out + bias.astype(jnp.float32)
-        if residual is not None:
-            out = out + residual.astype(jnp.float32)
-        return out.astype(out_dtype or a.dtype)
-    n = b["q"].shape[-1] if quantized else b.shape[-1]
-    out_dtype = out_dtype or (a.dtype if out_scale is None else jnp.int8)
-    lead = a.shape[:-1]
-    a2 = a.reshape((-1, a.shape[-1]))
-    bias2 = bias.reshape((1, n)) if bias is not None else None
-    res2 = residual.reshape((-1, n)) if residual is not None else None
-    if out_scale is not None:
-        # quantized output is a forward-only serving feature (no VJP
-        # through the rounding) — dispatch without the custom-VJP wrapper
-        osc = jnp.asarray(out_scale, jnp.float32).reshape((1, 1))
-        out = _ep_dispatch(a2, b["q"] if quantized else b,
-                           b["scale"] if quantized else None, bias2,
-                           res2, osc, activation, strategy, tile,
-                           out_dtype)
-        return out.reshape(lead + (n,))
-    if quantized:
-        out = _gemm2d_ep_q(a2, b["q"], b["scale"], bias2, res2,
-                           activation, strategy, tile,
-                           jnp.dtype(out_dtype))
-    else:
-        out = _gemm2d_ep(a2, b, bias2, res2, activation, strategy, tile,
-                         jnp.dtype(out_dtype))
-    return out.reshape(lead + (n,)).astype(out_dtype)
 
 
-def gemm_gated(a: jax.Array, b_gate, b_up, *, activation: str = "silu",
-               tile: Optional[TileConfig] = None,
-               out_dtype=None) -> jax.Array:
-    """h = act(A @ B_gate) * (A @ B_up) — the SwiGLU/GeGLU core as ONE
-    kernel call: a single resident A stream feeds both B operands and
-    the (m, n) gate/up intermediates never leave VMEM.
-
-    ``b_gate`` / ``b_up``: (k, n) arrays or quantized ``{"q", "scale"}``
-    structs (both or neither).  Output-stationary dataflow; gate math in
-    fp32 on the accumulators.  The custom VJP falls back to the unfused
-    two-GEMM composition.
-    """
-    out_dtype = out_dtype or a.dtype
-    lead = a.shape[:-1]
-    a2 = a.reshape((-1, a.shape[-1]))
-    qg = isinstance(b_gate, dict) and {"q", "scale"} <= set(b_gate)
-    qu = isinstance(b_up, dict) and {"q", "scale"} <= set(b_up)
-    assert qg == qu, "quantize both gated operands or neither"
-    if qg:
-        n = b_gate["q"].shape[-1]
-        out = _gemm2d_gated_q(a2, b_gate["q"], b_gate["scale"],
-                              b_up["q"], b_up["scale"], activation, tile,
-                              jnp.dtype(out_dtype))
-    else:
-        n = b_gate.shape[-1]
-        out = _gemm2d_gated(a2, b_gate, b_up, activation, tile,
-                            jnp.dtype(out_dtype))
-    return out.reshape(lead + (n,)).astype(out_dtype)
+def gemm_fused(a, b, *, bias=None, activation=None, residual=None,
+               out_scale=None, strategy=None, tile=None, out_dtype=None):
+    """Deprecated shim: epilogue-fused GEMM through the planned API."""
+    _warn("gemm_fused")
+    return api.gemm(a, b, bias=bias, activation=activation,
+                    residual=residual, out_scale=out_scale,
+                    strategy=strategy, tile=tile, out_dtype=out_dtype)
 
 
-def gemm(a: jax.Array, b, *, strategy: Optional[str] = None,
-         tile: Optional[TileConfig] = None,
-         out_dtype=None) -> jax.Array:
-    """C = A @ B.  ``a``: (..., k), ``b``: (k, n).  Leading dims of ``a``
-    are flattened into M (the paper tiles GEMM, models bring (b, s, d)).
-
-    ``b`` may be a weight-only int8 struct ``{"q", "scale"}`` from
-    ``repro.quant`` (the paper's int8 precision as a serving mode) —
-    routed to the fused kernels, which stream the int8 block at one
-    byte/element and dequantize in-register (W8A16).  Under
-    ``quant.activation_mode() == "w8a8"`` the activations are
-    additionally quantized per-row on the fly and the kernel runs
-    int8 x int8 with int32 accumulation (forward-only).
-    """
-    out_dtype = out_dtype or a.dtype
-    if isinstance(b, dict) and {"q", "scale"} <= set(b):
-        n = b["q"].shape[-1]
-        lead = a.shape[:-1]
-        a2 = a.reshape((-1, a.shape[-1]))
-        if _quant.activation_mode() == "w8a8" \
-                and a2.dtype != jnp.int8:
-            a_q, a_s = _quant.quantize_activations(
-                jax.lax.stop_gradient(a2), axis=-1)
-            acc = _gemm2d_q(a_q, b["q"], b["scale"], strategy, tile,
-                            jnp.dtype(jnp.float32))
-            out = (acc * a_s).astype(out_dtype)
-        else:
-            out = _gemm2d_q(a2, b["q"], b["scale"], strategy, tile,
-                            jnp.dtype(out_dtype)).astype(out_dtype)
-        return out.reshape(lead + (n,))
-    lead = a.shape[:-1]
-    a2 = a.reshape((-1, a.shape[-1]))
-    out = _gemm2d(a2, b, strategy, tile, jnp.dtype(out_dtype))
-    return out.reshape(lead + (b.shape[-1],)).astype(out_dtype)
+def gemm_gated(a, b_gate, b_up, *, activation="silu", tile=None,
+               out_dtype=None):
+    """Deprecated shim: dual-B gated GEMM through the planned API."""
+    _warn("gemm_gated")
+    return api.gemm(a, b_gate, b2=b_up, activation=activation, tile=tile,
+                    out_dtype=out_dtype)
 
 
 def gemm_int8(a_q, b_q, a_scale, b_scale, *, out_dtype=jnp.float32,
-              tile: Optional[TileConfig] = None):
-    """Quantized GEMM (int8 operands, int32 accumulation, fused dequant) —
-    the paper's precision scheme as a serving-path op."""
-    if use_pallas():
-        m, k = a_q.shape
-        _, n = b_q.shape
-        # int32 OUTPUT: the kernel writes the int32 accumulator, so the
-        # DSE must bill C at 4 bytes (an "int8" out under-billed C
-        # traffic 4x and could pick tiles that bust VMEM).
-        t = tile or dse.best_tile(m, k, n, "int8", "int32", "int32")
-        acc = _gemm_pallas(a_q, b_q, t, jnp.int32)
-    else:
-        acc = jnp.dot(a_q, b_q, preferred_element_type=jnp.int32)
+              tile=None):
+    """Deprecated shim: raw int8 x int8 GEMM (int32 accumulation, scales
+    applied outside) through the planned API."""
+    _warn("gemm_int8")
+    acc = api.gemm(a_q, b_q, tile=tile, out_dtype=jnp.int32)
     return (acc.astype(jnp.float32) * a_scale * b_scale).astype(out_dtype)
 
 

@@ -88,7 +88,8 @@ def _shard_bytes(struct_tree, sharding_tree) -> int:
 
 def run_cell(arch: str, shape_name: str, mesh_mode: str,
              debug_shape: Optional[str] = None,
-             layout_name: Optional[str] = None) -> dict:
+             layout_name: Optional[str] = None,
+             explain: bool = False) -> dict:
     import jax
     from repro.configs.base import get_config
     from repro.core import hlo_cost, roofline
@@ -146,6 +147,14 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
                              in parsed.flops_by_scope.items()}
     rec["params"] = cfg.param_count()
     rec["params_active"] = cfg.param_count(active_only=True)
+
+    # Every GEMM the cell traced went through the planned GemmSpec API;
+    # the plan cache therefore holds the cell's full per-GEMM decision
+    # record (kernel, tile, modeled bytes, fallback reasons).
+    from repro import ops as rops
+    rec["gemm_plan_cache"] = rops.plan_cache_info()._asdict()
+    if explain:
+        rec["gemm_plans"] = [p.explain() for p in rops.plans()]
     rec["ok"] = True
     return rec
 
@@ -219,6 +228,10 @@ def main() -> None:
                     help="run every (arch × shape) cell via subprocesses")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--explain", action="store_true",
+                    help="print GemmPlan.explain() for every GEMM the "
+                         "cell planned (kernel, tile, modeled HBM/VMEM "
+                         "bytes, fallback reasons)")
     ap.add_argument("--layout", default=None,
                     choices=(None, "tp", "fsdp_tp"))
     ap.add_argument("--debug-mesh", default=None,
@@ -238,7 +251,7 @@ def main() -> None:
     try:
         rec = run_cell(args.arch, args.shape, modes[0],
                        debug_shape=args.debug_mesh,
-                       layout_name=args.layout)
+                       layout_name=args.layout, explain=args.explain)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": modes[0],
                "ok": False, "error": traceback.format_exc()}
@@ -246,8 +259,13 @@ def main() -> None:
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
+    if args.explain and rec.get("gemm_plans"):
+        print(f"[dryrun] {len(rec['gemm_plans'])} planned GEMMs "
+              f"(cache {rec['gemm_plan_cache']}):")
+        for text in rec["gemm_plans"]:
+            print(text)
     print(json.dumps({k: v for k, v in rec.items()
-                      if k not in ("error",)}, indent=1))
+                      if k not in ("error", "gemm_plans")}, indent=1))
     if not rec["ok"]:
         print(rec.get("error", ""), file=sys.stderr)
         sys.exit(1)

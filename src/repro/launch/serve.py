@@ -87,6 +87,13 @@ def _warmup(engine: DecodeEngine, cfg, prompt_lens,
             for p in sorted(set(int(p) for p in prompt_lens))]
     engine.run(reqs)
     engine.reset_metrics()
+    # warm-up traced every prefill/decode GEMM through the planned
+    # GemmSpec API; the cache now holds one resolved plan per unique
+    # (spec, shape) — steady-state serving adds no DSE work
+    from repro import ops
+    info = ops.plan_cache_info()
+    print(f"[serve] gemm plan cache after warm-up: {info.entries} "
+          f"plans ({info.hits} hits / {info.misses} misses)")
 
 
 def run_trace(engine: DecodeEngine, cfg, args) -> None:

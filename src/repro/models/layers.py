@@ -3,9 +3,10 @@
 
 Params are plain pytrees (nested dicts of jnp arrays); every layer is a
 pair of pure functions ``init_*(key, ...) -> params`` and
-``*(params, x, ...) -> y``.  All dense projections route through
-:func:`repro.kernels.ops.gemm` so the paper's tiled-GEMM layer is the
-compute substrate of every architecture.
+``*(params, x, ...) -> y``.  All dense projections route through the
+planned :func:`repro.ops.gemm` (GemmSpec -> plan -> execute) so the
+paper's tiled-GEMM layer is the compute substrate of every
+architecture.
 """
 
 from __future__ import annotations
@@ -17,8 +18,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 from repro.dist import sharding as shd
-from repro.kernels import ops
 from repro.kernels.ref import NEG_INF
 
 
@@ -100,10 +101,10 @@ def swiglu(params: dict, x: jax.Array,
     the old three-GEMM + XLA-silu composition did.  ``residual`` (the
     transformer residual-stream x) fuses into the down-projection's
     flush."""
-    h = ops.gemm_gated(x, params["w_gate"], params["w_up"],
-                       activation="silu")
+    h = ops.gemm(x, params["w_gate"], b2=params["w_up"],
+                 activation="silu")
     h = shd.act(h, ("batch", None, "model"))
-    return ops.gemm_fused(h, params["w_down"], residual=residual)
+    return ops.gemm(h, params["w_down"], residual=residual)
 
 
 def init_gelu_mlp(key, d: int, d_ff: int, dtype) -> dict:
@@ -114,9 +115,9 @@ def init_gelu_mlp(key, d: int, d_ff: int, dtype) -> dict:
 
 def gelu_mlp(params: dict, x: jax.Array,
              residual: Optional[jax.Array] = None) -> jax.Array:
-    h = ops.gemm_fused(x, params["w_in"], activation="gelu")
+    h = ops.gemm(x, params["w_in"], activation="gelu")
     h = shd.act(h, ("batch", None, "model"))
-    return ops.gemm_fused(h, params["w_out"], residual=residual)
+    return ops.gemm(h, params["w_out"], residual=residual)
 
 
 # ---------------------------------------------------------------------------
@@ -201,8 +202,8 @@ def attention_block(params: dict, x: jax.Array, spec: AttnSpec,
         k, v = kv
         out = ops.attention(q, k, v, causal=False, window=0)
     out = shd.act(out, ("batch", None, "model", None))
-    return ops.gemm_fused(out.reshape(b, s, -1), params["wo"],
-                          residual=residual)
+    return ops.gemm(out.reshape(b, s, -1), params["wo"],
+                    residual=residual)
 
 
 def init_kv_cache(batch: int, max_len: int, spec: AttnSpec, dtype) -> dict:
@@ -249,8 +250,8 @@ def attention_decode(params: dict, x: jax.Array, cache: dict,
 
     out = ops.decode_attention(q[:, 0], k_att, v_att, pos,
                                window=spec.window)
-    out = ops.gemm_fused(out.reshape(b, 1, -1), params["wo"],
-                         residual=residual)
+    out = ops.gemm(out.reshape(b, 1, -1), params["wo"],
+                   residual=residual)
     return out, {"k": k_cache, "v": v_cache}
 
 

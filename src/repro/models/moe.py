@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as shd
-from repro.kernels import ops
+from repro import ops
 from repro.models.layers import dense_init, _split
 
 

@@ -17,7 +17,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro import ops
 from repro.models.layers import _split, dense_init
 
 CONV_WIDTH = 4

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.dist import sharding as shd
-from repro.kernels import ops
+from repro import ops
 from repro.models import layers as L
 from repro.models import mamba2 as M2
 from repro.models import moe as MOE
@@ -408,8 +408,8 @@ def _decode_ring(p, cache, spec: L.AttnSpec, x, pos, wpos,
     out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v_cache.dtype),
                      v_cache, preferred_element_type=jnp.float32) \
         .astype(x.dtype)
-    out = ops.gemm_fused(out.reshape(b, 1, -1), p["attn"]["wo"],
-                         residual=residual)
+    out = ops.gemm(out.reshape(b, 1, -1), p["attn"]["wo"],
+                   residual=residual)
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -468,8 +468,8 @@ def prefill_layer(p: dict, cache: dict, cfg: ModelConfig, kind: str,
         positions = jnp.arange(s)
         q, k, v = L._project_qkv(p["attn"], h, spec, positions)
         out = ops.attention(q, k, v, causal=True, window=spec.window)
-        out = ops.gemm_fused(out.reshape(b, s, -1), p["attn"]["wo"],
-                             residual=x)
+        out = ops.gemm(out.reshape(b, s, -1), p["attn"]["wo"],
+                       residual=x)
         cache_max = cache["k"].shape[1]
         if cache_max >= s:
             ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1)

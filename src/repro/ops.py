@@ -1,0 +1,43 @@
+"""``repro.ops`` — the public operator API.
+
+The GEMM family is the declarative planned pipeline from
+:mod:`repro.kernels.api`:
+
+    spec = ops.GemmSpec.for_operands(x, w, residual=r)   # or GemmSpec(...)
+    pl   = ops.plan(spec, ops.gemm_shapes(x, w))         # cached, once
+    y    = ops.execute(pl, x, w, residual=r)
+    print(pl.explain())                                  # kernel/tile/bytes
+
+or the one-shot form every model layer uses (identical dispatch — it
+builds the spec and goes through the same plan cache):
+
+    y = ops.gemm(x, w, residual=r)
+
+Attention and the quantization helpers ride along so model code needs a
+single ``from repro import ops``.  The pre-redesign entrypoints
+(``gemm_fused``/``gemm_gated``/``gemm_int8`` and the old ``gemm``) live
+on as deprecated shims in :mod:`repro.kernels.ops`.
+"""
+
+from repro.kernels.api import (  # noqa: F401
+    GemmPlan,
+    GemmSpec,
+    PlanCacheInfo,
+    execute,
+    gemm,
+    gemm_shapes,
+    plan,
+    plan_cache_clear,
+    plan_cache_info,
+    plans,
+    use_pallas,
+)
+from repro.kernels.epilogue import ACTIVATIONS, Epilogue  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    BLOCKED_ATTN_THRESHOLD,
+    attention,
+    decode_attention,
+    dequantize,
+    quantize_int8,
+)
+from repro.core.tiling import TileConfig  # noqa: F401

@@ -6,7 +6,7 @@ accumulation).  Training here stays bf16, but the serving path can load
 weights quantized to symmetric per-output-channel int8:
 :func:`quantize_params` rewrites every dense projection leaf into a
 ``{"q": int8 (k,n), "scale": f32 (1,n)}`` struct, and
-``repro.kernels.ops.gemm`` consumes those structs through the *fused*
+``repro.ops.gemm`` consumes those structs through the *fused*
 Pallas path: the int8 block streams into VMEM at one byte/element and is
 dequantized in-register inside the kernel body, so weight HBM traffic —
 the dominant term of batched decode — halves vs bf16 (W8A16).
@@ -118,7 +118,8 @@ def gemm_weight_bytes(params) -> int:
 
 
 # --------------------------------------------------------------- W8A8
-# Dynamic activation quantization mode for decode.  ops.gemm consults
+# Dynamic activation quantization mode for decode.  The planned GEMM
+# execute path consults
 # this at trace time when it receives a quantized weight struct.
 
 _ACTIVATION_MODES = ("none", "w8a8")

@@ -15,6 +15,12 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gemm_aie import gemm_aie
 from repro.kernels.gemm_tb import gemm_tb
 
+# These suites exercise the deprecated legacy entrypoints on purpose
+# (old-vs-new parity is the point); the -W error::DeprecationWarning
+# CI invocation must not fail them.
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
 
 def _rand(key, shape, dtype):
     if dtype == jnp.int8:

@@ -17,6 +17,12 @@ from repro.kernels import ops, ref
 from repro.kernels.gemm_aie import gemm_aie
 from repro.kernels.gemm_tb import gemm_tb
 
+# These suites exercise the deprecated legacy entrypoints on purpose
+# (old-vs-new parity is the point); the -W error::DeprecationWarning
+# CI invocation must not fail them.
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
 
 # --------------------------------------------------- cost-model layer
 

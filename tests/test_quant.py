@@ -10,6 +10,12 @@ from repro.configs.base import get_smoke_config
 from repro.kernels import ops
 from repro.models import transformer as T
 
+# These suites exercise the deprecated legacy entrypoints on purpose
+# (old-vs-new parity is the point); the -W error::DeprecationWarning
+# CI invocation must not fail them.
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
 
 def test_quantize_weight_roundtrip_error():
     w = jax.random.normal(jax.random.PRNGKey(0), (128, 64), jnp.float32)
