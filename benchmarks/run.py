@@ -12,9 +12,12 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import sys
 import time
 from typing import List
+
+from repro import telemetry
 
 MODULES = (
     "table2_memory_model",
@@ -55,6 +58,13 @@ def main() -> None:
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
 
+    # REPRO_TELEMETRY=PATH records one shared telemetry stream across
+    # every benchmark module and exports PATH.jsonl + PATH.trace.json
+    # (CI uploads these next to the BENCH_*.json artifacts)
+    telemetry_base = os.environ.get("REPRO_TELEMETRY")
+    if telemetry_base:
+        telemetry.enable()
+
     report = Report()
     for name in mods:
         mod = importlib.import_module(f"benchmarks.{name}")
@@ -64,6 +74,12 @@ def main() -> None:
         except Exception as e:                      # pragma: no cover
             report.row(name, "run", ok=False, error=repr(e)[:200])
         print(f"# {name} ({time.time()-t0:.1f}s)", file=sys.stderr)
+    if telemetry_base:
+        snap = telemetry.snapshot()
+        paths = telemetry.export(telemetry_base)
+        print(f"# telemetry: {snap['n_events']} events, plan cache "
+              f"{snap['plan_cache']}; wrote {paths[0]} and {paths[1]}",
+              file=sys.stderr)
     report.print()
     n_fail = report.failures
     print(f"# {len(report.rows)} rows, {n_fail} failures",

@@ -106,6 +106,24 @@ def run(report) -> None:
                decode_tok_s=f"{engine.tokens_per_sec():.1f}",
                steps=m["decode_steps"], ok=True)
 
+    # --- per-request latency breakdown: TTFT + queue wait from the
+    # engine's request lifecycle (every acceptance request arrives at
+    # t=0, so queue wait here IS the scheduler's admission delay)
+    ttfts = np.asarray([results[r.rid].ttft for r in reqs])
+    qwaits = np.asarray([results[r.rid].queue_wait for r in reqs])
+    per_request = [
+        {"rid": r.rid, "prompt_len": int(r.prompt.shape[0]),
+         "n_tokens": results[r.rid].n_tokens,
+         "ttft_s": round(float(results[r.rid].ttft), 6),
+         "queue_wait_s": round(float(results[r.rid].queue_wait), 6)}
+        for r in reqs
+    ]
+    report.row("serve", "request latency breakdown",
+               ttft_mean_ms=f"{ttfts.mean()*1e3:.1f}",
+               ttft_p99_ms=f"{np.percentile(ttfts, 99)*1e3:.1f}",
+               queue_wait_mean_ms=f"{qwaits.mean()*1e3:.1f}",
+               ok=bool((ttfts > 0).all()))
+
     payload = {
         "trace": {"prompt_lens": PROMPT_LENS, "max_tokens": MAX_TOKENS,
                   "n_slots": N_SLOTS, "useful_tokens": useful},
@@ -121,6 +139,13 @@ def run(report) -> None:
         "lockstep": dict(lock, modeled_tokens_per_unit=lock_tps),
         "modeled_speedup": speedup,
         "bit_identical": exact == len(reqs),
+        "requests": per_request,
+        "latency": {
+            "ttft_mean_s": float(ttfts.mean()),
+            "ttft_p99_s": float(np.percentile(ttfts, 99)),
+            "queue_wait_mean_s": float(qwaits.mean()),
+            "queue_wait_p99_s": float(np.percentile(qwaits, 99)),
+        },
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=2)

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import quant as _quant
+from repro import telemetry
 from repro.core import dse
 from repro.core.bandwidth import TrafficEstimate, estimate
 from repro.core.hardware import TPU_V5E
@@ -164,6 +165,25 @@ class GemmSpec:
                 raise ValueError(
                     "the gated dual-B kernel is output-stationary "
                     "('aie') only; strategy/tile 'tb' is infeasible")
+
+    @property
+    def key(self) -> str:
+        """Compact canonical string — the join key telemetry events and
+        the model-vs-measured report use for this spec."""
+        s = f"{self.a_dtype}x{self.b_dtype}"
+        if self.b_quant:
+            s += "{q}"
+        if self.gated:
+            s += ":gated"
+        if self.epilogue.key:
+            s += f":{self.epilogue.key}"
+        if self.out_dtype:
+            s += f"->{self.out_dtype}"
+        if self.strategy:
+            s += f"!{self.strategy}"
+        if self.tile is not None:
+            s += f"!{self.tile.bm}x{self.tile.bk}x{self.tile.bn}"
+        return s
 
     @classmethod
     def for_operands(cls, a, b, b2=None, *, bias=None,
@@ -288,6 +308,7 @@ class PlanCacheInfo(NamedTuple):
 
 
 _plan_cache: dict = {}
+_executed: set = set()          # plan keys whose execute() already traced
 _plan_hits = 0
 _plan_misses = 0
 
@@ -302,9 +323,11 @@ def plan_cache_info() -> PlanCacheInfo:
 def plan_cache_clear() -> None:
     """Drop every cached plan and zero the hit/miss counters (tests that
     monkeypatch the DSE or feasibility checks must call this, or stale
-    plans computed under different rules leak between tests)."""
+    plans computed under different rules leak between tests; benchmark
+    sections call it so per-section hit/miss counts start clean)."""
     global _plan_hits, _plan_misses
     _plan_cache.clear()
+    _executed.clear()
     _plan_hits = 0
     _plan_misses = 0
 
@@ -353,11 +376,30 @@ def plan(spec: GemmSpec, shapes: Tuple[int, int, int]) -> GemmPlan:
     cached = _plan_cache.get(key)
     if cached is not None:
         _plan_hits += 1
+        if telemetry.enabled():
+            _plan_event(cached, "hit")
         return cached
     _plan_misses += 1
     resolved = _resolve(spec, m, k, n)
     _plan_cache[key] = resolved
+    if telemetry.enabled():
+        _plan_event(resolved, "miss")
     return resolved
+
+
+def _plan_event(pl: "GemmPlan", cache: str) -> None:
+    """One telemetry event per plan() call: the full decision record —
+    spec key, chosen strategy/tile, modeled HBM/VMEM bytes, flops,
+    roofline verdict, cache hit/miss, and any fallback reason."""
+    t = pl.tile
+    telemetry.counter(f"gemm.plan_cache.{cache}").add(1)
+    telemetry.event(
+        "gemm.plan", cache=cache, spec=pl.spec.key,
+        m=pl.m, k=pl.k, n=pl.n, strategy=t.strategy,
+        tile=f"{t.bm}x{t.bk}x{t.bn}", hbm_bytes=pl.hbm_bytes,
+        vmem_bytes=pl.vmem_bytes, flops=pl.flops,
+        t_model_us=pl.traffic.t_model * 1e6, bound=pl.traffic.bound,
+        fallback_reason=pl.fallback_reason)
 
 
 def _resolve(spec: GemmSpec, m: int, k: int, n: int) -> GemmPlan:
@@ -664,6 +706,18 @@ def execute(pl: GemmPlan, a: jax.Array, b, *, b2=None,
         raise ValueError(
             f"operand dtypes ({_dtname(a2.dtype)}, {_dtname(b.dtype)}) "
             f"do not match the spec ({spec.a_dtype}, {spec.b_dtype})")
+    if telemetry.enabled():
+        ek = (spec, pl.m, pl.k, pl.n)
+        if ek not in _executed:
+            # first trace of this plan only: jitted callers re-enter
+            # execute() once per compilation, eager callers every call —
+            # the dedup keeps the event stream one record per plan
+            _executed.add(ek)
+            telemetry.event(
+                "gemm.execute", spec=spec.key, m=pl.m, k=pl.k, n=pl.n,
+                strategy=pl.tile.strategy, mode=_mode(),
+                hbm_bytes=pl.hbm_bytes, flops=pl.flops)
+            telemetry.counter("gemm.execute.first_traces").add(1)
     n = pl.n
     out_dtype = jnp.dtype(pl.problem.out_dtype)
     bias2 = bias.reshape((1, n)) if bias is not None else None

@@ -89,7 +89,7 @@ def _shard_bytes(struct_tree, sharding_tree) -> int:
 def run_cell(arch: str, shape_name: str, mesh_mode: str,
              debug_shape: Optional[str] = None,
              layout_name: Optional[str] = None,
-             explain: bool = False) -> dict:
+             explain: bool = False, measure: bool = False) -> dict:
     import jax
     from repro.configs.base import get_config
     from repro.core import hlo_cost, roofline
@@ -112,13 +112,17 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
     rec.update(mesh_shape=list(mesh.devices.shape),
                mesh_axes=list(mesh.axis_names), n_devices=n_devices)
 
+    from repro import telemetry
     with shd.use_mesh(mesh):
         p = specs.build_problem(arch, shape_name, mesh, layout_name)
         rec.update(layout=p.layout_name, tokens_per_step=p.tokens)
         t0 = time.time()
-        lowered = specs.lower_problem(p)
+        with telemetry.span("dryrun.lower", arch=arch, shape=shape_name):
+            lowered = specs.lower_problem(p)
         t1 = time.time()
-        compiled = lowered.compile()
+        with telemetry.span("dryrun.compile", arch=arch,
+                            shape=shape_name):
+            compiled = lowered.compile()
         t2 = time.time()
 
     rec.update(lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2))
@@ -155,6 +159,14 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
     rec["gemm_plan_cache"] = rops.plan_cache_info()._asdict()
     if explain:
         rec["gemm_plans"] = [p.explain() for p in rops.plans()]
+    if measure:
+        # the measured half: every GEMM the cell planned is executed
+        # standalone (jitted, synced) and joined with its modeled
+        # bytes/roofline time — the model-vs-measured table
+        from repro.telemetry import report as treport
+        rows = treport.model_vs_measured(rops.plans())
+        rec["model_vs_measured"] = rows
+        rec["model_vs_measured_summary"] = treport.summarize(rows)
     rec["ok"] = True
     return rec
 
@@ -232,6 +244,14 @@ def main() -> None:
                     help="print GemmPlan.explain() for every GEMM the "
                          "cell planned (kernel, tile, modeled HBM/VMEM "
                          "bytes, fallback reasons)")
+    ap.add_argument("--measure", action="store_true",
+                    help="execute every planned GEMM standalone and "
+                         "print the model-vs-measured table (modeled "
+                         "bytes + roofline time vs measured wall-clock "
+                         "per spec+shape)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="record plan events + lower/compile/measure "
+                         "spans; writes PATH.jsonl + PATH.trace.json")
     ap.add_argument("--layout", default=None,
                     choices=(None, "tp", "fsdp_tp"))
     ap.add_argument("--debug-mesh", default=None,
@@ -248,10 +268,14 @@ def main() -> None:
         sys.exit(1 if failures else 0)
 
     assert args.arch and args.shape, "--arch/--shape or --all"
+    if args.telemetry:
+        from repro import telemetry
+        telemetry.enable()
     try:
         rec = run_cell(args.arch, args.shape, modes[0],
                        debug_shape=args.debug_mesh,
-                       layout_name=args.layout, explain=args.explain)
+                       layout_name=args.layout, explain=args.explain,
+                       measure=args.measure)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": modes[0],
                "ok": False, "error": traceback.format_exc()}
@@ -264,8 +288,16 @@ def main() -> None:
               f"(cache {rec['gemm_plan_cache']}):")
         for text in rec["gemm_plans"]:
             print(text)
+    if args.measure and rec.get("model_vs_measured"):
+        from repro.telemetry import report as treport
+        print("[dryrun] model-vs-measured (per planned GEMM):")
+        print(treport.render(rec["model_vs_measured"]))
+    if args.telemetry:
+        paths = telemetry.export(args.telemetry)
+        print(f"[dryrun] telemetry: wrote {paths[0]} and {paths[1]}")
     print(json.dumps({k: v for k, v in rec.items()
-                      if k not in ("error", "gemm_plans")}, indent=1))
+                      if k not in ("error", "gemm_plans",
+                                   "model_vs_measured")}, indent=1))
     if not rec["ok"]:
         print(rec.get("error", ""), file=sys.stderr)
         sys.exit(1)

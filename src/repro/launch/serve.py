@@ -22,6 +22,7 @@ import time
 import jax
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import get_config, get_smoke_config
 from repro.dist import layout, sharding as shd
@@ -106,6 +107,8 @@ def run_trace(engine: DecodeEngine, cfg, args) -> None:
                          now_fn=lambda: time.perf_counter() - t0)
     dt = time.perf_counter() - t0
     lat = np.asarray([r.finished_time - r.arrival for r in results])
+    ttft = np.asarray([r.ttft for r in results])
+    qwait = np.asarray([r.queue_wait for r in results])
     gen = sum(r.n_tokens for r in results)
     m = engine.metrics
     print(f"[serve] trace: {len(results)}/{args.trace} requests, "
@@ -117,6 +120,10 @@ def run_trace(engine: DecodeEngine, cfg, args) -> None:
           f"slot occupancy {engine.occupancy():.2f} "
           f"({m['decode_steps']} steps x {engine.n_slots} slots, "
           f"{m['prefill_tokens']} prompt tokens)")
+    print(f"[serve] ttft: mean {ttft.mean()*1e3:.0f} ms, "
+          f"p99 {np.percentile(ttft, 99)*1e3:.0f} ms; "
+          f"queue wait: mean {qwait.mean()*1e3:.0f} ms, "
+          f"p99 {np.percentile(qwait, 99)*1e3:.0f} ms")
 
 
 def run_batch(engine: DecodeEngine, cfg, args) -> None:
@@ -166,6 +173,11 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=None,
                     help="cache slots for --trace (default --batch)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="record spans/counters for the whole run and "
+                         "write PATH.jsonl + PATH.trace.json (the "
+                         "latter loads in chrome://tracing or "
+                         "ui.perfetto.dev)")
     ap.add_argument("--int8", action="store_true",
                     help="fused int8 weights, bf16 activations (W8A16)")
     ap.add_argument("--w8a8", action="store_true",
@@ -173,6 +185,8 @@ def main() -> None:
                          "(the paper's int8 x int8 / int32-accumulate "
                          "scheme); implies --int8")
     args = ap.parse_args()
+    if args.telemetry:
+        telemetry.enable()
     if args.w8a8:
         args.int8 = True
         from repro import quant
@@ -206,6 +220,12 @@ def main() -> None:
             run_trace(engine, cfg, args)
         else:
             run_batch(engine, cfg, args)
+    if args.telemetry:
+        snap = telemetry.snapshot()
+        paths = telemetry.export(args.telemetry)
+        print(f"[serve] telemetry: {snap['n_events']} events, "
+              f"plan cache {snap['plan_cache']}; wrote "
+              f"{paths[0]} and {paths[1]}")
 
 
 if __name__ == "__main__":

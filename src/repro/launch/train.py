@@ -22,6 +22,7 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import get_config, get_smoke_config
 from repro.data import pipeline
@@ -78,8 +79,12 @@ def train(cfg, *, steps: int, seq_len: int, global_batch: int,
         for step in range(start, steps):
             batch = pipeline.make_batch(cfg, data_cfg, step)
             t0 = time.time()
-            state, metrics = jitted(state, batch)
-            jax.block_until_ready(metrics["loss"])
+            with telemetry.span("train.step", step=step) as sp:
+                state, metrics = jitted(state, batch)
+                sp.sync(metrics["loss"])
+                jax.block_until_ready(metrics["loss"])
+            telemetry.counter("train.tokens").add(
+                data_cfg.seq_len * data_cfg.global_batch)
             dt = time.time() - t0
             ev = watchdog.observe(step, dt)
             if ev:
@@ -108,7 +113,12 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="record per-step spans + GEMM plan events and "
+                         "write PATH.jsonl + PATH.trace.json")
     args = ap.parse_args()
+    if args.telemetry:
+        telemetry.enable()
     cfg = get_smoke_config(args.arch) if args.smoke \
         else get_config(args.arch)
     out = train(cfg, steps=args.steps, seq_len=args.seq_len,
@@ -116,6 +126,12 @@ def main() -> None:
                 microbatches=args.microbatches,
                 ckpt_dir=args.ckpt_dir, seed=args.seed)
     print("[train] final:", {k: round(v, 4) for k, v in out.items()})
+    if args.telemetry:
+        snap = telemetry.snapshot()
+        paths = telemetry.export(args.telemetry)
+        print(f"[train] telemetry: {snap['n_events']} events, "
+              f"plan cache {snap['plan_cache']}; wrote "
+              f"{paths[0]} and {paths[1]}")
 
 
 if __name__ == "__main__":

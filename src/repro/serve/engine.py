@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 
@@ -105,8 +106,10 @@ class RequestResult:
     admitted_step: int                   # engine decode-step counters
     finished_step: int
     arrival: float                       # request arrival (trace clock)
-    admitted_time: float                 # wall clock, engine-relative
-    finished_time: float
+    admitted_time: float                 # same clock as arrival when the
+    finished_time: float                 # ... trace supplies one
+    queue_wait: float = 0.0              # arrival -> admission seconds
+    ttft: float = 0.0                    # arrival -> first sampled token
 
     @property
     def n_tokens(self) -> int:
@@ -176,6 +179,10 @@ class _SlotState:
     remaining: int                       # decode steps left (max_tokens-1
     admitted_step: int                   # ... minus steps already run)
     admitted_time: float
+    queue_wait: float = 0.0              # arrival -> admission seconds
+    first_token_time: float = 0.0        # first token ready (run clock)
+    admitted_abs: float = 0.0            # perf_counter absolutes for the
+    first_abs: float = 0.0               # ... telemetry lifecycle spans
 
 
 class DecodeEngine:
@@ -284,6 +291,9 @@ class DecodeEngine:
         req.rid = rid
         self._requests[rid] = req
         self._sched.submit(rid)
+        telemetry.event("serve.request.queued", rid=rid,
+                        prompt_len=int(req.prompt.shape[0]),
+                        max_tokens=req.max_tokens, arrival=req.arrival)
         return rid
 
     def _ensure_cache(self) -> None:
@@ -291,25 +301,43 @@ class DecodeEngine:
             self._cache = T.init_cache(self.cfg, self.n_slots,
                                        self.max_len)
 
-    def _admit(self, slot: int, req: Request, now: float) -> None:
+    def _admit(self, slot: int, req: Request,
+               clock: Callable[[], float]) -> None:
         """Prefill the request into ``slot`` of the live cache and seed
-        its first sampled token."""
+        its first sampled token.  The first token is synced here —
+        admission IS the time-to-first-token boundary, so its timestamp
+        must not drift into the next decode burst."""
+        plen = int(req.prompt.shape[0])
+        adm_time = clock()
+        adm_abs = time.perf_counter()
+        queue_wait = max(adm_time - req.arrival, 0.0)
         toks = jnp.asarray(req.prompt[None, :], jnp.int32)
         frames = None if req.frames is None \
             else jnp.asarray(req.frames[None])
-        logits, self._cache = self._prefill_slot(
-            self.params, toks, self._cache, jnp.asarray(slot, jnp.int32),
-            frames)
-        temp = np.float32(req.temperature)
-        first = self._sample(logits, temp[None])         # (1,)
+        with telemetry.span("serve.prefill", rid=req.rid, slot=slot,
+                            prompt_len=plen) as sp:
+            logits, self._cache = self._prefill_slot(
+                self.params, toks, self._cache,
+                jnp.asarray(slot, jnp.int32), frames)
+            temp = np.float32(req.temperature)
+            first = self._sample(logits, temp[None])     # (1,)
+            sp.sync(first)
+        jax.block_until_ready(first)
+        first_time = clock()
         self._tok = self._tok.at[slot, 0].set(first[0])
         self._temps[slot] = temp
-        self.metrics["prefill_tokens"] += int(req.prompt.shape[0])
+        self.metrics["prefill_tokens"] += plen
+        telemetry.counter("serve.prefill_tokens").add(plen)
+        telemetry.event("serve.request.admitted", rid=req.rid, slot=slot,
+                        queue_wait=queue_wait,
+                        step=self.metrics["decode_steps"])
         self._state[slot] = _SlotState(
             req=req, gen=[], first_dev=first[0],
             remaining=req.max_tokens - 1,
             admitted_step=self.metrics["decode_steps"],
-            admitted_time=now)
+            admitted_time=adm_time, queue_wait=queue_wait,
+            first_token_time=first_time, admitted_abs=adm_abs,
+            first_abs=time.perf_counter())
 
     def _finish(self, slot: int, now: float) -> RequestResult:
         """Truncate at EOS / max_tokens, emit the result, free the slot
@@ -330,13 +358,36 @@ class DecodeEngine:
         self._requests.pop(req.rid, None)
         self.metrics["generated_tokens"] += len(toks)
         self.metrics["completed"] += 1
+        ttft = max(st.first_token_time - req.arrival, 0.0)
+        if telemetry.enabled():
+            fin_abs = time.perf_counter()
+            arr_abs = st.admitted_abs - st.queue_wait
+            common = dict(tid=req.rid, rid=req.rid)
+            telemetry.complete_span("serve.request", arr_abs, fin_abs,
+                                    prompt_len=int(req.prompt.shape[0]),
+                                    n_tokens=len(toks), ttft=ttft,
+                                    queue_wait=st.queue_wait, **common)
+            telemetry.complete_span("serve.request.queued", arr_abs,
+                                    st.admitted_abs, **common)
+            telemetry.complete_span("serve.request.prefill",
+                                    st.admitted_abs, st.first_abs,
+                                    **common)
+            telemetry.complete_span("serve.request.decode", st.first_abs,
+                                    fin_abs, tokens=len(toks), **common)
+            telemetry.event("serve.request.finished", rid=req.rid,
+                            n_tokens=len(toks), ttft=ttft,
+                            queue_wait=st.queue_wait,
+                            e2e=max(now - req.arrival, 0.0))
+            telemetry.counter("serve.generated_tokens").add(len(toks))
+            telemetry.counter("serve.completed").add(1)
         return RequestResult(
             rid=req.rid, prompt_len=int(req.prompt.shape[0]),
             tokens=np.asarray(toks, np.int32),
             admitted_step=st.admitted_step,
             finished_step=self.metrics["decode_steps"],
             arrival=req.arrival,
-            admitted_time=st.admitted_time, finished_time=now)
+            admitted_time=st.admitted_time, finished_time=now,
+            queue_wait=st.queue_wait, ttft=ttft)
 
     def _sync_slot(self, slot: int, burst_host: Optional[np.ndarray],
                    col: Optional[int]) -> None:
@@ -371,6 +422,11 @@ class DecodeEngine:
         self._ensure_cache()
         now = now_fn or (lambda: float("inf"))
         t_run0 = time.perf_counter()
+        # result/telemetry timestamps share the arrival clock when the
+        # trace supplies one, so queue-wait / TTFT / latency subtract
+        # consistent quantities; admission gating keeps the legacy
+        # semantics (no now_fn -> every queued request is admittable)
+        clock = now_fn or (lambda: time.perf_counter() - t_run0)
         done: List[RequestResult] = []
 
         while self._sched.has_work():
@@ -379,13 +435,13 @@ class DecodeEngine:
                     self._requests[self._sched.queue[0]].arrival <= now():
                 slot, rid = self._sched.admit()
                 req = self._requests[rid]
-                self._admit(slot, req, time.perf_counter() - t_run0)
+                self._admit(slot, req, clock)
                 if req.max_tokens <= 1:
                     self._sync_slot(slot, None, None)
-                    done.append(self._finish(
-                        slot, time.perf_counter() - t_run0))
+                    done.append(self._finish(slot, clock()))
 
             active = self._sched.active_slots
+            telemetry.gauge("serve.slots_active").set(len(active))
             if not active:
                 if self._sched.queue:
                     time.sleep(poll)       # waiting on the next arrival
@@ -396,17 +452,20 @@ class DecodeEngine:
             k = min([EOS_CHECK_EVERY]
                     + [self._state[s].remaining for s in active])
             burst: List[jax.Array] = []
-            t_burst0 = time.perf_counter()
-            for _ in range(max(k, 1)):
-                logits, self._cache = self._step(self.params, self._tok,
-                                                 self._cache)
-                samp = self._sample(logits, self._temps)
-                self._tok = samp[:, None]
-                burst.append(samp)
-            jax.block_until_ready(self._tok)
+            with telemetry.span("serve.decode_burst", steps=max(k, 1),
+                                active=len(active)):
+                t_burst0 = time.perf_counter()
+                for _ in range(max(k, 1)):
+                    logits, self._cache = self._step(
+                        self.params, self._tok, self._cache)
+                    samp = self._sample(logits, self._temps)
+                    self._tok = samp[:, None]
+                    burst.append(samp)
+                jax.block_until_ready(self._tok)
             self.metrics["decode_time"] += time.perf_counter() - t_burst0
             self.metrics["decode_steps"] += len(burst)
             self.metrics["useful_slot_steps"] += len(burst) * len(active)
+            telemetry.counter("serve.decode_steps").add(len(burst))
             for s in active:
                 self._state[s].remaining -= len(burst)
 
@@ -415,8 +474,9 @@ class DecodeEngine:
             for s in active:
                 self._sync_slot(s, host, s)
                 if self._slot_done(s):
-                    done.append(self._finish(
-                        s, time.perf_counter() - t_run0))
+                    done.append(self._finish(s, clock()))
+            telemetry.gauge("serve.slots_active").set(
+                self._sched.n_active)
 
         return done
 

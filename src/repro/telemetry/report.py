@@ -1,0 +1,180 @@
+"""Model-vs-measured reporting: join every planned GEMM's modeled cost
+(HBM bytes, roofline time) with a measured standalone execution.
+
+The DSE is purely analytic; this module is the measurement half the
+ROADMAP's autotuning item needs.  For each :class:`~repro.kernels.api.
+GemmPlan` in the plan cache (populated by lowering a model, running a
+benchmark, or serving a trace), it synthesizes operands matching the
+spec, executes the plan through the public ``execute`` path (jitted,
+``block_until_ready``), and reports per spec+shape:
+
+* the *modeled* side — HBM bytes, flops, roofline-predicted time and
+  whether the model calls it compute- or memory-bound;
+* the *measured* side — mean wall-clock over ``iters`` runs (compile
+  excluded by a warm-up call);
+* ``achieved`` — modeled-time / measured-time, the fraction of the
+  roofline the execution actually reached.
+
+Honesty note: the roofline is a TPU-v5e model.  On a CPU host (the
+``ref``/``interpret`` dispatch modes) the measured numbers are XLA-CPU
+or interpreter wall-clock, so ``achieved`` is only meaningful for
+*relative* comparisons between specs/tiles on the same host — the
+absolute fraction says nothing about TPU behavior.  Each row records the
+dispatch mode so downstream consumers can tell.
+
+Plans whose padded flops exceed ``max_flops`` are not silently dropped:
+they appear as rows with ``note='skipped (flops budget)'`` and no
+measured time.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro import telemetry
+
+#: per-GEMM flop budget for the measured pass — dryrun plan caches
+#: contain million-token train GEMMs that would take hours on a CPU host
+DEFAULT_MAX_FLOPS = 5e10
+
+
+def _rand(rng: np.random.Generator, shape, dtype: str):
+    import jax.numpy as jnp
+    if dtype == "int8":
+        return jnp.asarray(
+            rng.integers(-127, 128, shape).astype(np.int8))
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32)
+                       ).astype(dtype)
+
+
+def _operands(pl, rng: np.random.Generator) -> dict:
+    """Synthesize execute() operands matching the plan's spec."""
+    spec, ep = pl.spec, pl.spec.epilogue
+    m, k, n = pl.m, pl.k, pl.n
+
+    def weight():
+        if spec.b_quant:
+            return {"q": _rand(rng, (k, n), "int8"),
+                    "scale": _rand(rng, (1, n), "float32") * 0.01 + 0.02}
+        return _rand(rng, (k, n), spec.b_dtype)
+
+    return {
+        "a": _rand(rng, (m, k), spec.a_dtype),
+        "b": weight(),
+        "b2": weight() if spec.gated else None,
+        "bias": _rand(rng, (n,), spec.a_dtype) if ep.bias else None,
+        "residual": (_rand(rng, (m, n), spec.a_dtype)
+                     if ep.residual else None),
+        "out_scale": 0.05 if ep.out_quant else None,
+    }
+
+
+def measure_plan(pl, *, iters: int = 3,
+                 rng: Optional[np.random.Generator] = None) -> float:
+    """Mean wall-clock seconds of one plan execution (jit-compiled and
+    warmed up first, device-synced per run)."""
+    import jax
+    from repro.kernels import api
+    rng = rng or np.random.default_rng(0)
+    ops = _operands(pl, rng)
+    out_scale = ops["out_scale"]
+
+    def f(a, b, b2, bias, residual):
+        return api.execute(pl, a, b, b2=b2, bias=bias,
+                           residual=residual, out_scale=out_scale)
+
+    jitted = jax.jit(f)
+    args = (ops["a"], ops["b"], ops["b2"], ops["bias"], ops["residual"])
+    jax.block_until_ready(jitted(*args))          # compile + warm-up
+    with telemetry.span("measure.gemm", spec=pl.spec.key,
+                        m=pl.m, k=pl.k, n=pl.n, iters=iters) as sp:
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = jitted(*args)
+        sp.sync(out)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / iters
+    return dt
+
+
+def model_vs_measured(plans: Optional[Sequence] = None, *,
+                      max_flops: float = DEFAULT_MAX_FLOPS,
+                      iters: int = 3, seed: int = 0) -> List[dict]:
+    """One row per plan: the modeled bytes/time next to the measured
+    wall-clock.  ``plans`` defaults to every plan resolved so far (the
+    plan cache in insertion order)."""
+    from repro.kernels import api
+    if plans is None:
+        plans = api.plans()
+    rng = np.random.default_rng(seed)
+    mode = api._mode()
+    rows: List[dict] = []
+    for pl in plans:
+        t = pl.tile
+        row = {
+            "spec": pl.spec.key,
+            "m": pl.m, "k": pl.k, "n": pl.n,
+            "strategy": t.strategy,
+            "tile": f"{t.bm}x{t.bk}x{t.bn}",
+            "hbm_mib": round(pl.hbm_bytes / 2**20, 3),
+            "flops": pl.flops,
+            "bound": pl.traffic.bound,
+            "t_model_us": round(pl.traffic.t_model * 1e6, 2),
+            "mode": mode,
+            "t_measured_us": None,
+            "achieved": None,
+            "note": "",
+        }
+        if pl.flops > max_flops:
+            row["note"] = "skipped (flops budget)"
+        else:
+            dt = measure_plan(pl, iters=iters, rng=rng)
+            row["t_measured_us"] = round(dt * 1e6, 2)
+            row["achieved"] = round(pl.traffic.t_model / dt, 5)
+            telemetry.event("gemm.measured", **{
+                k: row[k] for k in ("spec", "m", "k", "n", "strategy",
+                                    "tile", "hbm_mib", "t_model_us",
+                                    "t_measured_us", "achieved", "mode")})
+        rows.append(row)
+    return rows
+
+
+def summarize(rows: Sequence[dict]) -> dict:
+    measured = [r for r in rows if r["t_measured_us"] is not None]
+    skipped = len(rows) - len(measured)
+    return {
+        "n_plans": len(rows),
+        "n_measured": len(measured),
+        "n_skipped": skipped,
+        "mean_achieved": (round(float(np.mean(
+            [r["achieved"] for r in measured])), 5) if measured else None),
+    }
+
+
+def render(rows: Sequence[dict]) -> str:
+    """Aligned text table of a model-vs-measured report."""
+    cols = ("spec", "shape", "tile", "hbm_mib", "t_model_us",
+            "t_measured_us", "achieved", "note")
+    table = [cols]
+    for r in rows:
+        table.append((
+            r["spec"], f"{r['m']}x{r['k']}x{r['n']}",
+            f"{r['strategy']} {r['tile']}", f"{r['hbm_mib']:.2f}",
+            f"{r['t_model_us']:.1f}",
+            "-" if r["t_measured_us"] is None
+            else f"{r['t_measured_us']:.1f}",
+            "-" if r["achieved"] is None else f"{r['achieved']:.3f}",
+            r["note"]))
+    widths = [max(len(row[i]) for row in table) for i in range(len(cols))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip()
+             for row in table]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    s = summarize(rows)
+    lines.append(f"[{s['n_measured']}/{s['n_plans']} plans measured, "
+                 f"{s['n_skipped']} skipped; mode sees a "
+                 f"{rows[0]['mode'] if rows else '?'} dispatch — achieved "
+                 "fractions compare hosts, not TPUs]")
+    return "\n".join(lines)
