@@ -5,14 +5,72 @@ sustain the accelerator's native throughput and *gates* the DSE on the
 device's DRAM bandwidth.  Here the 'off-chip' level is HBM and the gate is
 the roofline: a tiling whose HBM traffic pushes the memory term above the
 compute term is memory-bound and ranked accordingly.
+
+The roofline rates default to the chip's datasheet constants, but a
+measured :class:`Calibration` (fitted by :mod:`repro.tune.calibrate`
+from the tuning cache's samples) can override them process-wide via
+:func:`set_calibration` — then every ``estimate()`` (and through it the
+DSE ranking and ``roofline.analyze``) prices designs at the *effective*
+rates this host actually achieves.  ``calibration_version()`` increments
+on every change so downstream caches (``dse._solve_cached``) key on it
+instead of serving pre-calibration answers.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.core.hardware import TPU_V5E, TPUChip
 from repro.core.tiling import GemmProblem, TileConfig, dtype_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured effective rates overriding a chip's datasheet constants
+    (``None`` fields keep the chip value)."""
+
+    hbm_bw: Optional[float] = None           # bytes/s
+    peak_bf16_flops: Optional[float] = None  # flop/s
+    peak_int8_ops: Optional[float] = None    # op/s
+    source: str = ""
+
+
+_calibration: Optional[Calibration] = None
+_cal_version: int = 0
+
+
+def set_calibration(cal: Optional[Calibration]) -> None:
+    """Install (or, with ``None``, drop) measured effective constants.
+    Explicit opt-in only — callers that cache anything priced by
+    ``estimate()`` must key on :func:`calibration_version`."""
+    global _calibration, _cal_version
+    _calibration = cal
+    _cal_version += 1
+
+
+def clear_calibration() -> None:
+    set_calibration(None)
+
+
+def get_calibration() -> Optional[Calibration]:
+    return _calibration
+
+
+def calibration_version() -> int:
+    return _cal_version
+
+
+def effective_rates(chip: TPUChip, int8: bool) -> tuple:
+    """(peak flop/s, HBM bytes/s) after any installed calibration."""
+    peak = chip.peak_int8_ops if int8 else chip.peak_bf16_flops
+    bw = chip.hbm_bw
+    cal = _calibration
+    if cal is not None:
+        over = cal.peak_int8_ops if int8 else cal.peak_bf16_flops
+        peak = over or peak
+        bw = cal.hbm_bw or bw
+    return peak, bw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,14 +150,13 @@ def estimate(tile: TileConfig, p: GemmProblem, chip: TPUChip = TPU_V5E
     flops = 2.0 * pm_ * pk * pn * p.n_b_operands
     # int8 MXU rate needs *both* operands at 8 bits; W8A16 dequantizes
     # in-register and multiplies at the bf16 rate.
-    peak = chip.peak_int8_ops \
-        if dtype_bytes(p.a_dtype) == 1 and dtype_bytes(p.b_dtype) == 1 \
-        else chip.peak_bf16_flops
+    int8 = dtype_bytes(p.a_dtype) == 1 and dtype_bytes(p.b_dtype) == 1
+    peak, hbm_bw = effective_rates(chip, int8)
     hbm = hbm_traffic_bytes(tile, p)
     return TrafficEstimate(
         hbm_bytes=hbm,
         flops=flops,
         t_compute=flops / peak,
-        t_memory=hbm / chip.hbm_bw,
+        t_memory=hbm / hbm_bw,
         arithmetic_intensity=flops / hbm,
     )

@@ -23,7 +23,11 @@ import dataclasses
 import functools
 from typing import List, Optional, Sequence, Tuple
 
-from repro.core.bandwidth import TrafficEstimate, estimate
+from repro.core.bandwidth import (
+    TrafficEstimate,
+    calibration_version,
+    estimate,
+)
 from repro.core.hardware import TPU_V5E, TPUChip
 from repro.core.memory_model import (
     fits_vmem,
@@ -84,7 +88,7 @@ def _lane_candidates(dim: int) -> Sequence[int]:
 def _solve_cached(m: int, k: int, n: int, a_dtype: str, b_dtype: str,
                   out_dtype: str, acc_dtype: str, epilogue: str,
                   n_b_operands: int, chip_name: str,
-                  budget_fraction: float, top: int
+                  budget_fraction: float, top: int, cal_version: int
                   ) -> Tuple["TileDesign", ...]:
     assert chip_name == TPU_V5E.name, "single-target build"
     chip = TPU_V5E
@@ -121,11 +125,15 @@ def _solve_cached(m: int, k: int, n: int, a_dtype: str, b_dtype: str,
 def solve(p: GemmProblem, chip: TPUChip = TPU_V5E,
           budget_fraction: float = 0.75, top: int = 10
           ) -> List[TileDesign]:
-    """Ranked tiling designs for a GEMM problem."""
+    """Ranked tiling designs for a GEMM problem.  The memo key includes
+    the cost-model calibration version: applying measured constants
+    (``repro.tune.calibrate.apply``) re-ranks instead of serving stale
+    pre-calibration answers."""
     return list(_solve_cached(p.m, p.k, p.n, p.a_dtype, p.b_dtype,
                               p.out_dtype, p.acc_dtype, p.epilogue,
                               p.n_b_operands, chip.name,
-                              budget_fraction, top))
+                              budget_fraction, top,
+                              calibration_version()))
 
 
 def best_tile(m: int, k: int, n: int, in_dtype: str = "bfloat16",

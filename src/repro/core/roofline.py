@@ -137,18 +137,25 @@ class RooflineReport:
 def analyze(compiled, *, chip: TPUChip = TPU_V5E, int8: bool = False,
             model_flops_per_device: Optional[float] = None,
             hlo_text: Optional[str] = None) -> RooflineReport:
-    """Build the 3-term roofline from a compiled (SPMD) executable."""
+    """Build the 3-term roofline from a compiled (SPMD) executable.
+
+    Compute/memory rates honor any installed cost-model calibration
+    (:func:`repro.core.bandwidth.set_calibration` — measured effective
+    constants fitted by ``repro.tune.calibrate``); the collective term
+    keeps the datasheet ICI rate (no calibration source measures it).
+    """
+    from repro.core.bandwidth import effective_rates
     cost = hlo_cost.xla_cost(compiled)
     text = hlo_text if hlo_text is not None else compiled.as_text()
     parsed = hlo_cost.analyze_text(text)
-    peak = chip.peak_int8_ops if int8 else chip.peak_bf16_flops
+    peak, hbm_bw = effective_rates(chip, int8)
     return RooflineReport(
         flops_per_device=parsed.flops,
         hbm_bytes_per_device=parsed.bytes_accessed,
         collective_bytes_per_device=parsed.collective_total,
         per_collective=parsed.collective_bytes,
         t_compute=parsed.flops / peak,
-        t_memory=parsed.bytes_accessed / chip.hbm_bw,
+        t_memory=parsed.bytes_accessed / hbm_bw,
         t_collective=parsed.collective_total / chip.ici_link_bw,
         peak_flops=peak,
         model_flops_per_device=model_flops_per_device,

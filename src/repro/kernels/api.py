@@ -117,6 +117,13 @@ class GemmSpec:
       an infeasible explicit tile raises at plan time.
     * ``out_dtype`` — ``None`` resolves to ``a_dtype`` (int8 when the
       epilogue quantizes the output).
+    * ``tune`` — measured autotuning (:mod:`repro.tune`): ``True`` makes
+      ``plan()`` consult the persistent tuning cache and, on a miss,
+      time the top-K analytic candidates on-device and pick the measured
+      winner; ``False`` forces the purely analytic DSE; ``None``
+      (default) defers to ``repro.tune.enable()`` / ``REPRO_AUTOTUNE``.
+      Excluded from :attr:`key` so tuning-cache entries join with the
+      same spec regardless of *how* tuning was switched on.
 
     Frozen and hashable: specs key the plan cache, ride jit static
     arguments, and serialize their intent into ``GemmProblem`` for the
@@ -131,6 +138,7 @@ class GemmSpec:
     out_dtype: Optional[str] = None
     strategy: Optional[str] = None
     tile: Optional[TileConfig] = None
+    tune: Optional[bool] = None
 
     def __post_init__(self):
         object.__setattr__(self, "a_dtype", _dtname(self.a_dtype))
@@ -190,7 +198,8 @@ class GemmSpec:
                      activation: Optional[str] = None, residual=None,
                      out_scale=None, strategy: Optional[str] = None,
                      tile: Optional[TileConfig] = None,
-                     out_dtype=None) -> "GemmSpec":
+                     out_dtype=None,
+                     tune: Optional[bool] = None) -> "GemmSpec":
         """Spec inferred from concrete operands (arrays or ``{"q",
         "scale"}`` weight structs) plus the optional epilogue set — what
         the one-shot :func:`gemm` and the legacy shims build."""
@@ -211,7 +220,7 @@ class GemmSpec:
             b_dtype="int8" if bq else _dtname(b.dtype),
             b_quant=bq, gated=gated, epilogue=ep,
             out_dtype=None if out_dtype is None else _dtname(out_dtype),
-            strategy=strategy, tile=tile)
+            strategy=strategy, tile=tile, tune=tune)
 
 
 def gemm_shapes(a, b) -> Tuple[int, int, int]:
@@ -225,6 +234,21 @@ def gemm_shapes(a, b) -> Tuple[int, int, int]:
 # ---------------------------------------------------------------------------
 # GemmPlan + the spec+shape-keyed plan cache
 # ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TunedInfo:
+    """The measured-autotuning record riding a tuned plan: the winner's
+    measured time (median, with spread), the analytic first choice it
+    was compared against, and whether the answer came from the
+    persistent cache (zero re-measurement) or a fresh top-K sweep."""
+
+    t_measured_us: float            # winner median wall-clock
+    spread: float                   # (max-min)/median of kept samples
+    t_analytic_us: Optional[float]  # measured time of the DSE's rank-0
+    analytic_tile: str              # e.g. "aie 16x512x512"
+    k_searched: int
+    from_cache: bool
+
 
 @dataclasses.dataclass(frozen=True)
 class GemmPlan:
@@ -241,6 +265,13 @@ class GemmPlan:
     traffic: TrafficEstimate
     vmem: VmemFootprint
     fallback_reason: Optional[str] = None
+    tuned: Optional[TunedInfo] = None
+
+    @property
+    def source(self) -> str:
+        """How the tile was chosen: ``'tuned'`` (measured winner from
+        the autotuner) or ``'analytic'`` (cost-model DSE)."""
+        return "tuned" if self.tuned is not None else "analytic"
 
     @property
     def hbm_bytes(self) -> float:
@@ -296,6 +327,23 @@ class GemmPlan:
             f"  epilogue : {s.epilogue.key or '(none)'}"
             + (f"  gated({s.epilogue.activation})" if s.gated else ""),
         ]
+        if self.tuned is not None:
+            ti = self.tuned
+            t_model_us = self.traffic.t_model * 1e6
+            src = (f"  source   : tuned ({'cache' if ti.from_cache else f'measured top-{ti.k_searched}'})  "
+                   f"{ti.t_measured_us:.1f} us measured vs "
+                   f"{t_model_us:.1f} us modeled "
+                   f"({ti.t_measured_us / t_model_us:.1f}x model, "
+                   f"spread {ti.spread:.0%})")
+            lines.append(src)
+            if ti.t_analytic_us is not None \
+                    and ti.analytic_tile != f"{t.strategy} {t.bm}x{t.bk}x{t.bn}":
+                lines.append(
+                    f"             analytic first choice "
+                    f"{ti.analytic_tile} measured "
+                    f"{ti.t_analytic_us:.1f} us")
+        else:
+            lines.append("  source   : analytic")
         if self.fallback_reason:
             lines.append(f"  fallback : {self.fallback_reason}")
         return "\n".join(lines)
@@ -393,23 +441,59 @@ def _plan_event(pl: "GemmPlan", cache: str) -> None:
     roofline verdict, cache hit/miss, and any fallback reason."""
     t = pl.tile
     telemetry.counter(f"gemm.plan_cache.{cache}").add(1)
+    tuned = pl.tuned
+    t_model_us = pl.traffic.t_model * 1e6
     telemetry.event(
         "gemm.plan", cache=cache, spec=pl.spec.key,
         m=pl.m, k=pl.k, n=pl.n, strategy=t.strategy,
         tile=f"{t.bm}x{t.bk}x{t.bn}", hbm_bytes=pl.hbm_bytes,
         vmem_bytes=pl.vmem_bytes, flops=pl.flops,
-        t_model_us=pl.traffic.t_model * 1e6, bound=pl.traffic.bound,
+        t_model_us=t_model_us, bound=pl.traffic.bound,
+        source=pl.source,
+        t_measured_us=tuned.t_measured_us if tuned else None,
+        measured_vs_model=(tuned.t_measured_us / t_model_us
+                           if tuned and t_model_us else None),
         fallback_reason=pl.fallback_reason)
 
 
-def _resolve(spec: GemmSpec, m: int, k: int, n: int) -> GemmPlan:
+def _problem_for(spec: GemmSpec, m: int, k: int, n: int) -> GemmProblem:
+    """The cost-model problem a spec resolves to at concrete shapes —
+    shared by ``plan()``, :func:`solve_topk` and the autotuner."""
     ep = spec.epilogue
     out_dtype = spec.out_dtype or ("int8" if ep.out_quant
                                    else spec.a_dtype)
     acc = "int32" if spec.a_dtype == "int8" else "float32"
-    problem = GemmProblem(m, k, n, spec.a_dtype, out_dtype, acc,
-                          spec.b_dtype, ep.key, 2 if spec.gated else 1)
+    return GemmProblem(m, k, n, spec.a_dtype, out_dtype, acc,
+                       spec.b_dtype, ep.key, 2 if spec.gated else 1)
+
+
+def solve_topk(spec: GemmSpec, shapes: Tuple[int, int, int],
+               k: int = 5) -> Tuple:
+    """The ranked analytic tile candidates the autotuner sweeps for
+    ``spec`` at ``shapes`` — a thin introspection wrapper over
+    ``dse.solve`` (:class:`repro.core.dse.TileDesign` rows, best first,
+    restricted to the spec's strategy when one is pinned; a restricted
+    spec can return fewer than ``k`` rows)."""
+    m, kk, n = (int(x) for x in shapes)
+    problem = _problem_for(spec, m, kk, n)
+    k = max(int(k), 1)
+    designs = dse.solve(problem, top=k)
+    if spec.strategy is not None:
+        designs = [d for d in designs if d.tile.strategy == spec.strategy]
+    return tuple(designs[:k])
+
+
+def _tune_enabled(spec: GemmSpec) -> bool:
+    if spec.tune is not None:
+        return spec.tune
+    from repro.tune import autotune as _autotune
+    return _autotune.is_enabled(None)
+
+
+def _resolve(spec: GemmSpec, m: int, k: int, n: int) -> GemmPlan:
+    problem = _problem_for(spec, m, k, n)
     fallback = None
+    tuned = None
     if spec.tile is not None:
         # explicit override: honored verbatim (quantized B included) —
         # but an infeasible tile raises instead of silently re-routing
@@ -420,28 +504,52 @@ def _resolve(spec: GemmSpec, m: int, k: int, n: int) -> GemmPlan:
                 f"explicit tile {tile.strategy} {tile.bm}x{tile.bk}x"
                 f"{tile.bn} is infeasible for {problem}: {err}")
     else:
-        designs = dse.solve(problem)
-        chosen = next((d for d in designs
-                       if spec.strategy in (None, d.tile.strategy)), None)
-        if chosen is None:
-            raise ValueError(
-                f"no feasible {spec.strategy!r} tiling for {problem}")
-        tile = _clamp_tile(chosen.tile, m, k, n)
-        err = _infeasible_reason(tile, problem)
-        if err:
-            # the DSE winner can only fail the stricter post-clamp tb
-            # recheck; fall back to the best 'aie' design and say why
-            aie = next((d for d in designs if d.tile.strategy == "aie"),
-                       None)
-            if aie is None:
-                raise ValueError(f"no feasible tiling for {problem}: {err}")
-            fallback = (f"tb tile {tile.bm}x{tile.bk}x{tile.bn} "
-                        f"infeasible ({err}); fell back to the DSE's "
-                        "aie winner")
-            tile = _clamp_tile(aie.tile, m, k, n)
+        tile = None
+        if _tune_enabled(spec):
+            # measured autotuning: the persistent tuning cache first,
+            # then a top-K measured sweep; any degradation (over-budget
+            # problem, stale/corrupt cache, measurement failure) falls
+            # through to the analytic DSE below — never an exception
+            from repro import tune as _tune
+            found = _tune.lookup_or_search(spec, (m, k, n), problem)
+            if found is not None:
+                cand, tuned = found
+                cand = _clamp_tile(cand, m, k, n)
+                err = _infeasible_reason(cand, problem)
+                if err:
+                    # e.g. a cache entry measured on a different host
+                    fallback = (f"tuned tile {cand.strategy} {cand.bm}x"
+                                f"{cand.bk}x{cand.bn} infeasible here "
+                                f"({err}); re-resolved analytically")
+                    tuned = None
+                else:
+                    tile = cand
+        if tile is None:
+            designs = dse.solve(problem)
+            chosen = next((d for d in designs
+                           if spec.strategy in (None, d.tile.strategy)),
+                          None)
+            if chosen is None:
+                raise ValueError(
+                    f"no feasible {spec.strategy!r} tiling for {problem}")
+            tile = _clamp_tile(chosen.tile, m, k, n)
+            err = _infeasible_reason(tile, problem)
+            if err:
+                # the DSE winner can only fail the stricter post-clamp
+                # tb recheck; fall back to the best 'aie' design
+                aie = next((d for d in designs
+                            if d.tile.strategy == "aie"), None)
+                if aie is None:
+                    raise ValueError(
+                        f"no feasible tiling for {problem}: {err}")
+                fallback = (f"tb tile {tile.bm}x{tile.bk}x{tile.bn} "
+                            f"infeasible ({err}); fell back to the "
+                            "DSE's aie winner")
+                tile = _clamp_tile(aie.tile, m, k, n)
     traffic = estimate(tile, problem, TPU_V5E)
     vmem = vmem_footprint(tile, problem, TPU_V5E)
-    return GemmPlan(spec, m, k, n, problem, tile, traffic, vmem, fallback)
+    return GemmPlan(spec, m, k, n, problem, tile, traffic, vmem,
+                    fallback, tuned)
 
 
 # ---------------------------------------------------------------------------
@@ -551,10 +659,13 @@ def _act_bwd(activation: Optional[str], z: jax.Array, g: jax.Array
 def _plain(a: jax.Array, b: jax.Array, b_scale, out_dtype,
            strategy: Optional[str] = None) -> jax.Array:
     """A planned plain GEMM (no epilogue) — the recompute primitive the
-    generic backward is composed from."""
+    generic backward is composed from.  Backward GEMMs pin
+    ``tune=False``: the autotuner measures forward plans only, and a
+    measurement pass must never trigger nested searches from its own
+    recompute GEMMs."""
     spec = GemmSpec(a_dtype=a.dtype, b_dtype=b.dtype,
                     b_quant=b_scale is not None, out_dtype=out_dtype,
-                    strategy=strategy)
+                    strategy=strategy, tune=False)
     pl = plan(spec, (a.shape[0], a.shape[1], b.shape[1]))
     return _gemm_core(pl, a, b, b_scale, None, None, None, None)
 
@@ -738,7 +849,7 @@ def execute(pl: GemmPlan, a: jax.Array, b, *, b2=None,
             jax.lax.stop_gradient(a2), axis=-1)
         sub = dataclasses.replace(spec, a_dtype="int8",
                                   epilogue=Epilogue(),
-                                  out_dtype="float32")
+                                  out_dtype="float32", tune=False)
         acc = _gemm_core(plan(sub, (pl.m, pl.k, pl.n)), a_q, b, b_scale,
                          None, None, None, None)
         out = acc * a_s
@@ -763,7 +874,8 @@ def gemm(a: jax.Array, b, *, b2=None, bias: Optional[jax.Array] = None,
          activation: Optional[str] = None,
          residual: Optional[jax.Array] = None, out_scale=None,
          strategy: Optional[str] = None,
-         tile: Optional[TileConfig] = None, out_dtype=None) -> jax.Array:
+         tile: Optional[TileConfig] = None, out_dtype=None,
+         tune: Optional[bool] = None) -> jax.Array:
     """The one-shot planned GEMM: ``spec -> plan -> execute`` in a
     single call.
 
@@ -781,7 +893,8 @@ def gemm(a: jax.Array, b, *, b2=None, bias: Optional[jax.Array] = None,
     spec = GemmSpec.for_operands(a, b, b2, bias=bias,
                                  activation=activation, residual=residual,
                                  out_scale=out_scale, strategy=strategy,
-                                 tile=tile, out_dtype=out_dtype)
+                                 tile=tile, out_dtype=out_dtype,
+                                 tune=tune)
     pl = plan(spec, gemm_shapes(a, b))
     return execute(pl, a, b, b2=b2, bias=bias, residual=residual,
                    out_scale=out_scale)

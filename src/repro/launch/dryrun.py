@@ -89,7 +89,8 @@ def _shard_bytes(struct_tree, sharding_tree) -> int:
 def run_cell(arch: str, shape_name: str, mesh_mode: str,
              debug_shape: Optional[str] = None,
              layout_name: Optional[str] = None,
-             explain: bool = False, measure: bool = False) -> dict:
+             explain: bool = False, measure: bool = False,
+             autotune: Optional[int] = None) -> dict:
     import jax
     from repro.configs.base import get_config
     from repro.core import hlo_cost, roofline
@@ -97,6 +98,12 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
     from repro.dist import sharding as shd
     from repro.launch import specs
     from repro.launch.shapes import SHAPES, skip_reason
+
+    if autotune:
+        # measured top-K tile search for every GEMM the cell plans;
+        # winners persist to the tuning cache (REPRO_TUNE_CACHE)
+        from repro import tune
+        tune.enable(None if autotune is True else int(autotune))
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -157,6 +164,12 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
     # record (kernel, tile, modeled bytes, fallback reasons).
     from repro import ops as rops
     rec["gemm_plan_cache"] = rops.plan_cache_info()._asdict()
+    if autotune:
+        from repro import tune
+        rec["tuning_cache"] = tune.tuning_cache_info()._asdict()
+        rec["gemm_sources"] = {
+            s: sum(1 for p in rops.plans() if p.source == s)
+            for s in ("tuned", "analytic")}
     if explain:
         rec["gemm_plans"] = [p.explain() for p in rops.plans()]
     if measure:
@@ -249,6 +262,16 @@ def main() -> None:
                          "print the model-vs-measured table (modeled "
                          "bytes + roofline time vs measured wall-clock "
                          "per spec+shape)")
+    ap.add_argument("--autotune", nargs="?", const=True, default=None,
+                    metavar="K",
+                    help="measured top-K tile search for every GEMM the "
+                         "cell plans (winners persist to the tuning "
+                         "cache); optional K narrows the candidate sweep")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="after the cell, regress the tuning cache's "
+                         "measured samples against modeled HBM bytes + "
+                         "flops and report effective per-mode bandwidth/"
+                         "compute constants with R2")
     ap.add_argument("--telemetry", default=None, metavar="PATH",
                     help="record plan events + lower/compile/measure "
                          "spans; writes PATH.jsonl + PATH.trace.json")
@@ -275,7 +298,7 @@ def main() -> None:
         rec = run_cell(args.arch, args.shape, modes[0],
                        debug_shape=args.debug_mesh,
                        layout_name=args.layout, explain=args.explain,
-                       measure=args.measure)
+                       measure=args.measure, autotune=args.autotune)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "mesh": modes[0],
                "ok": False, "error": traceback.format_exc()}
@@ -292,6 +315,17 @@ def main() -> None:
         from repro.telemetry import report as treport
         print("[dryrun] model-vs-measured (per planned GEMM):")
         print(treport.render(rec["model_vs_measured"]))
+    if args.autotune and rec.get("tuning_cache"):
+        from repro import tune
+        print(f"[dryrun] tuning cache {tune.cache_path()}: "
+              f"{rec['tuning_cache']} sources {rec.get('gemm_sources')}")
+    if args.calibrate:
+        from repro import tune
+        fits = tune.calibrate.fit()
+        print(tune.calibrate.render(fits))
+        rec["calibration"] = {m: c.as_dict() for m, c in fits.items()}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
     if args.telemetry:
         paths = telemetry.export(args.telemetry)
         print(f"[dryrun] telemetry: wrote {paths[0]} and {paths[1]}")

@@ -23,6 +23,7 @@ from repro.kernels.api import (  # noqa: F401
     GemmPlan,
     GemmSpec,
     PlanCacheInfo,
+    TunedInfo,
     execute,
     gemm,
     gemm_shapes,
@@ -30,6 +31,7 @@ from repro.kernels.api import (  # noqa: F401
     plan_cache_clear,
     plan_cache_info,
     plans,
+    solve_topk,
     use_pallas,
 )
 from repro.kernels.epilogue import ACTIVATIONS, Epilogue  # noqa: F401

@@ -10,8 +10,12 @@ spec, executes the plan through the public ``execute`` path (jitted,
 
 * the *modeled* side — HBM bytes, flops, roofline-predicted time and
   whether the model calls it compute- or memory-bound;
-* the *measured* side — mean wall-clock over ``iters`` runs (compile
-  excluded by a warm-up call);
+* the *measured* side — **median** wall-clock over ``iters``
+  device-synced runs after ``warmup`` warm-up calls (compile excluded)
+  with MAD outlier rejection, plus the surviving ``spread``
+  ((max-min)/median) so a noisy host is visible in the table instead of
+  silently folded into a mean — the shared :mod:`repro.tune.measure`
+  harness the autotuner uses;
 * ``achieved`` — modeled-time / measured-time, the fraction of the
   roofline the execution actually reached.
 
@@ -29,83 +33,38 @@ measured time.
 
 from __future__ import annotations
 
-import time
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro import telemetry
-
-#: per-GEMM flop budget for the measured pass — dryrun plan caches
-#: contain million-token train GEMMs that would take hours on a CPU host
-DEFAULT_MAX_FLOPS = 5e10
-
-
-def _rand(rng: np.random.Generator, shape, dtype: str):
-    import jax.numpy as jnp
-    if dtype == "int8":
-        return jnp.asarray(
-            rng.integers(-127, 128, shape).astype(np.int8))
-    return jnp.asarray(rng.standard_normal(shape).astype(np.float32)
-                       ).astype(dtype)
+from repro.tune import measure as _measure
+from repro.tune.measure import (  # noqa: F401  (compat re-exports)
+    DEFAULT_MAX_FLOPS,
+    Measurement,
+    synthesize_operands,
+)
 
 
-def _operands(pl, rng: np.random.Generator) -> dict:
-    """Synthesize execute() operands matching the plan's spec."""
-    spec, ep = pl.spec, pl.spec.epilogue
-    m, k, n = pl.m, pl.k, pl.n
-
-    def weight():
-        if spec.b_quant:
-            return {"q": _rand(rng, (k, n), "int8"),
-                    "scale": _rand(rng, (1, n), "float32") * 0.01 + 0.02}
-        return _rand(rng, (k, n), spec.b_dtype)
-
-    return {
-        "a": _rand(rng, (m, k), spec.a_dtype),
-        "b": weight(),
-        "b2": weight() if spec.gated else None,
-        "bias": _rand(rng, (n,), spec.a_dtype) if ep.bias else None,
-        "residual": (_rand(rng, (m, n), spec.a_dtype)
-                     if ep.residual else None),
-        "out_scale": 0.05 if ep.out_quant else None,
-    }
-
-
-def measure_plan(pl, *, iters: int = 3,
-                 rng: Optional[np.random.Generator] = None) -> float:
-    """Mean wall-clock seconds of one plan execution (jit-compiled and
-    warmed up first, device-synced per run)."""
-    import jax
-    from repro.kernels import api
-    rng = rng or np.random.default_rng(0)
-    ops = _operands(pl, rng)
-    out_scale = ops["out_scale"]
-
-    def f(a, b, b2, bias, residual):
-        return api.execute(pl, a, b, b2=b2, bias=bias,
-                           residual=residual, out_scale=out_scale)
-
-    jitted = jax.jit(f)
-    args = (ops["a"], ops["b"], ops["b2"], ops["bias"], ops["residual"])
-    jax.block_until_ready(jitted(*args))          # compile + warm-up
-    with telemetry.span("measure.gemm", spec=pl.spec.key,
-                        m=pl.m, k=pl.k, n=pl.n, iters=iters) as sp:
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out = jitted(*args)
-        sp.sync(out)
-        jax.block_until_ready(out)
-        dt = (time.perf_counter() - t0) / iters
-    return dt
+def measure_plan(pl, *, iters: int = _measure.DEFAULT_ITERS,
+                 warmup: int = _measure.DEFAULT_WARMUP,
+                 rng: Optional[np.random.Generator] = None
+                 ) -> Measurement:
+    """Measure one plan with the shared :mod:`repro.tune.measure`
+    harness (jit + explicit warm-up, ``iters`` device-synced samples,
+    MAD outlier rejection).  Returns the full :class:`Measurement`;
+    use ``.median_s`` for the headline number."""
+    return _measure.measure_plan(pl, iters=iters, warmup=warmup, rng=rng)
 
 
 def model_vs_measured(plans: Optional[Sequence] = None, *,
                       max_flops: float = DEFAULT_MAX_FLOPS,
-                      iters: int = 3, seed: int = 0) -> List[dict]:
+                      iters: int = _measure.DEFAULT_ITERS,
+                      warmup: int = _measure.DEFAULT_WARMUP,
+                      seed: int = 0) -> List[dict]:
     """One row per plan: the modeled bytes/time next to the measured
-    wall-clock.  ``plans`` defaults to every plan resolved so far (the
-    plan cache in insertion order)."""
+    median wall-clock and its spread.  ``plans`` defaults to every plan
+    resolved so far (the plan cache in insertion order)."""
     from repro.kernels import api
     if plans is None:
         plans = api.plans()
@@ -119,25 +78,34 @@ def model_vs_measured(plans: Optional[Sequence] = None, *,
             "m": pl.m, "k": pl.k, "n": pl.n,
             "strategy": t.strategy,
             "tile": f"{t.bm}x{t.bk}x{t.bn}",
+            "source": pl.source,
             "hbm_mib": round(pl.hbm_bytes / 2**20, 3),
             "flops": pl.flops,
             "bound": pl.traffic.bound,
             "t_model_us": round(pl.traffic.t_model * 1e6, 2),
             "mode": mode,
+            "iters": iters,
+            "warmup": warmup,
             "t_measured_us": None,
+            "spread": None,
             "achieved": None,
             "note": "",
         }
         if pl.flops > max_flops:
             row["note"] = "skipped (flops budget)"
         else:
-            dt = measure_plan(pl, iters=iters, rng=rng)
+            meas = measure_plan(pl, iters=iters, warmup=warmup, rng=rng)
+            dt = meas.median_s
             row["t_measured_us"] = round(dt * 1e6, 2)
+            row["spread"] = round(meas.spread, 4)
             row["achieved"] = round(pl.traffic.t_model / dt, 5)
+            if meas.rejected:
+                row["note"] = f"{meas.rejected} outlier(s) rejected"
             telemetry.event("gemm.measured", **{
                 k: row[k] for k in ("spec", "m", "k", "n", "strategy",
-                                    "tile", "hbm_mib", "t_model_us",
-                                    "t_measured_us", "achieved", "mode")})
+                                    "tile", "source", "hbm_mib",
+                                    "t_model_us", "t_measured_us",
+                                    "spread", "achieved", "mode")})
         rows.append(row)
     return rows
 
@@ -156,16 +124,18 @@ def summarize(rows: Sequence[dict]) -> dict:
 
 def render(rows: Sequence[dict]) -> str:
     """Aligned text table of a model-vs-measured report."""
-    cols = ("spec", "shape", "tile", "hbm_mib", "t_model_us",
-            "t_measured_us", "achieved", "note")
+    cols = ("spec", "shape", "tile", "src", "hbm_mib", "t_model_us",
+            "t_measured_us", "spread", "achieved", "note")
     table = [cols]
     for r in rows:
         table.append((
             r["spec"], f"{r['m']}x{r['k']}x{r['n']}",
-            f"{r['strategy']} {r['tile']}", f"{r['hbm_mib']:.2f}",
+            f"{r['strategy']} {r['tile']}",
+            r.get("source", "analytic"), f"{r['hbm_mib']:.2f}",
             f"{r['t_model_us']:.1f}",
             "-" if r["t_measured_us"] is None
             else f"{r['t_measured_us']:.1f}",
+            "-" if r.get("spread") is None else f"{r['spread'] * 100:.0f}%",
             "-" if r["achieved"] is None else f"{r['achieved']:.3f}",
             r["note"]))
     widths = [max(len(row[i]) for row in table) for i in range(len(cols))]

@@ -1,0 +1,50 @@
+"""``repro.tune`` — measured autotuning: on-device top-K tile search,
+the persistent tuning cache, and cost-model calibration.
+
+The analytic DSE (:mod:`repro.core.dse`) picks tiles from a traffic
+model; this package closes the loop against reality:
+
+* :mod:`repro.tune.measure` — the shared timing harness (synthesized
+  operands, jit + explicit warm-up, median-of-N with outlier rejection
+  and reported spread);
+* :mod:`repro.tune.autotune` — when enabled, ``plan()`` times the top-K
+  analytic candidates and picks the measured winner;
+* :mod:`repro.tune.cache` — winners persist to a schema-versioned JSON
+  file keyed like the plan cache (spec key + shape + dispatch mode), so
+  a second process re-measures nothing;
+* :mod:`repro.tune.calibrate` — least-squares fit of effective
+  bandwidth/compute constants from the recorded samples, optionally fed
+  back into the analytic model.
+
+Enable per spec (``GemmSpec(tune=True)``), per process
+(:func:`enable` / ``--autotune`` on dryrun and serve), or via the
+``REPRO_AUTOTUNE`` env var.
+"""
+
+from repro.tune import calibrate  # noqa: F401
+from repro.tune.autotune import (  # noqa: F401
+    DEFAULT_K,
+    disable,
+    enable,
+    is_enabled,
+    lookup_or_search,
+    search_k,
+)
+from repro.tune.cache import (  # noqa: F401
+    SCHEMA_VERSION as CACHE_SCHEMA_VERSION,
+    TuningCache,
+    TuningCacheInfo,
+    cache_key,
+    cache_path,
+    tuning_cache,
+    tuning_cache_info,
+    tuning_cache_reset,
+)
+from repro.tune.measure import (  # noqa: F401
+    DEFAULT_ITERS,
+    DEFAULT_MAX_FLOPS,
+    DEFAULT_WARMUP,
+    Measurement,
+    measure_plan,
+    synthesize_operands,
+)
