@@ -20,6 +20,13 @@ Modeled tokens/sec is useful tokens per unit; the ratio is asserted
 >= 1.5x and written to ``BENCH_serve.json`` (with measured wall-clock
 numbers alongside) so the serving trajectory is machine-readable across
 PRs; the pallas-interpret CI job uploads it as an artifact.
+
+The paged sections extend the trace with one long-prompt request and
+score the block-paged KV pool: admitted capacity at equal pool bytes
+(asserted >= 2x the dense-rows engine), the decode stall chunked
+prefill bounds (asserted below the unchunked run's), prefix sharing
+(the shared prefix prefills exactly once, counter-asserted), and the
+same bit-identical-to-solo-greedy oracle with paging enabled.
 """
 
 from __future__ import annotations
@@ -33,7 +40,8 @@ import numpy as np
 
 from repro.configs.base import get_smoke_config
 from repro.models import transformer as T
-from repro.serve.engine import (ACCEPTANCE_TRACE, DecodeEngine,
+from repro.serve import paging
+from repro.serve.engine import (ACCEPTANCE_TRACE, DecodeEngine, Request,
                                 acceptance_requests, solo_greedy)
 
 BENCH_JSON = os.environ.get("REPRO_SERVE_BENCH_JSON", "BENCH_serve.json")
@@ -42,6 +50,13 @@ PROMPT_LENS = tuple(p for p, _ in ACCEPTANCE_TRACE)
 MAX_TOKENS = tuple(mt for _, mt in ACCEPTANCE_TRACE)
 N_SLOTS = 2
 SPEEDUP_FLOOR = 1.5
+
+#: the acceptance trace plus one long-prompt request — the ragged mix
+#: where per-slot dense max_len rows waste the most cache
+LONG_TRACE = ACCEPTANCE_TRACE + ((8, 8), (96, 8))
+PAGE_SIZE = 16
+CAPACITY_FLOOR = 2.0            # paged admitted tokens / dense, asserted
+PREFILL_CHUNK = 16
 
 
 def lockstep_units(prompt_lens, max_tokens, n_slots) -> dict:
@@ -56,6 +71,131 @@ def lockstep_units(prompt_lens, max_tokens, n_slots) -> dict:
         decode_steps += max(mts) - 1            # first token rides prefill
     return {"prefill_tokens": prefill, "decode_steps": decode_steps,
             "slot_token_units": prefill + decode_steps * n_slots}
+
+
+def _long_requests(vocab: int, seed: int = 0) -> list:
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(0, vocab, (p,)).astype(np.int32),
+                    max_tokens=mt) for p, mt in LONG_TRACE]
+
+
+def _fifo_admitted(needs, prompts, dense_len, usable_pages):
+    """FIFO head-of-line admitted tokens at equal pool bytes: dense
+    rows reserve ``dense_len`` per request; the paged pool (the real
+    :class:`PagedKV` allocator) reserves only the pages each request's
+    true need touches."""
+    dense_tokens = free = usable_pages * PAGE_SIZE
+    dense_admitted = 0
+    for n in needs:
+        if free < dense_len:
+            break
+        free -= dense_len
+        dense_admitted += n
+    kv = paging.PagedKV(len(needs), 1 + usable_pages, PAGE_SIZE,
+                        dense_len // PAGE_SIZE, prefix_cache=False)
+    paged_admitted = 0
+    for slot, (n, prompt) in enumerate(zip(needs, prompts)):
+        if not kv.can_admit(prompt, n):
+            break
+        kv.admit(slot, prompt, n)
+        paged_admitted += n
+    return dense_admitted, paged_admitted, dense_tokens
+
+
+def _paged_sections(report, cfg, params) -> dict:
+    """Paged-KV benchmark rows; returns the BENCH_serve.json subtree."""
+    needs = [p + mt - 1 for p, mt in LONG_TRACE]
+    dense_len = -(-max(needs) // PAGE_SIZE) * PAGE_SIZE
+    usable_pages = N_SLOTS * dense_len // PAGE_SIZE
+
+    # --- capacity at equal pool bytes: what FIFO admission fits
+    dense_adm, paged_adm, pool_tokens = _fifo_admitted(
+        needs, [r.prompt for r in _long_requests(cfg.vocab)],
+        dense_len, usable_pages)
+    cap_ratio = paged_adm / dense_adm
+    report.row("serve",
+               f"paged capacity at equal pool bytes ({pool_tokens} tok)",
+               dense_admitted_tokens=dense_adm,
+               paged_admitted_tokens=paged_adm,
+               ratio=f"{cap_ratio:.2f}x",
+               ok=cap_ratio >= CAPACITY_FLOOR)
+
+    # --- solo oracles for the long trace
+    solo = [solo_greedy(params, cfg, r.prompt, r.max_tokens, dense_len)
+            for r in _long_requests(cfg.vocab)]
+
+    def paged_run(**kw):
+        eng = DecodeEngine(params, cfg, batch=N_SLOTS, max_len=dense_len,
+                           page_size=PAGE_SIZE, n_pages=1 + usable_pages,
+                           prefix_cache=False, **kw)
+        res = {r.rid: r for r in eng.run(_long_requests(cfg.vocab))}
+        exact = sum(bool(np.array_equal(res[i].tokens, solo[i]))
+                    for i in range(len(solo)))
+        return eng, res, exact
+
+    eng_u, _, exact_u = paged_run()
+    report.row("serve", "paged ragged trace vs solo batch-1 (greedy)",
+               bit_identical=f"{exact_u}/{len(solo)}",
+               ok=exact_u == len(solo))
+
+    # --- chunked prefill bounds the decode stall the long prompt causes
+    eng_c, res_c, exact_c = paged_run(prefill_chunk=PREFILL_CHUNK)
+    stall_u = eng_u.metrics["max_prefill_stall_tokens"]
+    stall_c = eng_c.metrics["max_prefill_stall_tokens"]
+    report.row("serve",
+               f"chunked prefill ({PREFILL_CHUNK} tok) decode stall",
+               unchunked_stall=stall_u, chunked_stall=stall_c,
+               chunks=max(r.prefill_chunks for r in res_c.values()),
+               ok=stall_c < stall_u and stall_c <= PREFILL_CHUNK
+               and exact_c == len(solo))
+
+    # --- honest KV billing: true positions (page-rounded) vs what the
+    # dense engine's max_len rows stream per step
+    kv_true = eng_u.metrics["modeled_kv_bytes"]
+    kv_dense = eng_u.metrics["modeled_kv_bytes_dense_rows"]
+    report.row("serve", "modeled decode KV stream, paged vs dense rows",
+               paged_mib=f"{kv_true / 2**20:.2f}",
+               dense_rows_mib=f"{kv_dense / 2**20:.2f}",
+               ratio=f"{kv_true / kv_dense:.2f}x", ok=kv_true < kv_dense)
+
+    # --- prefix sharing: a 32-token shared prefix prefills exactly once
+    rng = np.random.default_rng(7)
+    pre = rng.integers(0, cfg.vocab, (2 * PAGE_SIZE,)).astype(np.int32)
+    prompts = [np.concatenate([pre, rng.integers(0, cfg.vocab, (8,))
+                               .astype(np.int32)]) for _ in range(2)]
+    solo_p = [solo_greedy(params, cfg, p, 8, dense_len) for p in prompts]
+    eng_p = DecodeEngine(params, cfg, batch=N_SLOTS, max_len=dense_len,
+                         page_size=PAGE_SIZE, n_pages=1 + usable_pages)
+    res_p = {r.rid: r for r in eng_p.run(
+        [Request(prompt=p, max_tokens=8) for p in prompts])}
+    exact_p = sum(bool(np.array_equal(res_p[i].tokens, solo_p[i]))
+                  for i in range(2))
+    mp = eng_p.metrics
+    total_prompt = sum(int(p.shape[0]) for p in prompts)
+    prefilled_once = mp["prefill_tokens"] == total_prompt - 2 * PAGE_SIZE
+    report.row("serve", "prefix sharing (32-token shared prefix)",
+               prefill_tokens=mp["prefill_tokens"],
+               shared_tokens=mp["shared_prompt_tokens"],
+               hits=mp["prefix_hits"], bit_identical=f"{exact_p}/2",
+               ok=prefilled_once and mp["prefix_hits"] == 1
+               and exact_p == 2)
+
+    return {
+        "trace": {"prompt_lens": [p for p, _ in LONG_TRACE],
+                  "max_tokens": [mt for _, mt in LONG_TRACE],
+                  "page_size": PAGE_SIZE, "pool_tokens": pool_tokens,
+                  "prefill_chunk": PREFILL_CHUNK},
+        "capacity": {"dense_admitted_tokens": dense_adm,
+                     "paged_admitted_tokens": paged_adm,
+                     "ratio": cap_ratio},
+        "stall": {"unchunked": stall_u, "chunked": stall_c},
+        "modeled_kv_bytes": {"paged": kv_true, "dense_rows": kv_dense,
+                             "ratio": kv_true / kv_dense},
+        "prefix": {"prefill_tokens": int(mp["prefill_tokens"]),
+                   "shared_tokens": int(mp["shared_prompt_tokens"]),
+                   "hits": int(mp["prefix_hits"])},
+        "bit_identical": exact_u == len(solo) and exact_c == len(solo),
+    }
 
 
 def run(report) -> None:
@@ -127,6 +267,7 @@ def run(report) -> None:
     payload = {
         "trace": {"prompt_lens": PROMPT_LENS, "max_tokens": MAX_TOKENS,
                   "n_slots": N_SLOTS, "useful_tokens": useful},
+        "paged": _paged_sections(report, cfg, params),
         "continuous": {
             "prefill_tokens": m["prefill_tokens"],
             "decode_steps": m["decode_steps"],

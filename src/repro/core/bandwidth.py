@@ -144,6 +144,33 @@ def hbm_traffic_bytes(tile: TileConfig, p: GemmProblem) -> float:
         + c_rmw * (2 * gk - 1) + c_bytes + bias_bytes + res_bytes
 
 
+def decode_kv_bytes(positions, *, n_kv_heads: int, head_dim: int,
+                    dtype="bfloat16", window: int = 0,
+                    page_size: Optional[int] = None) -> int:
+    """Modeled HBM bytes ONE attention layer streams from its KV cache
+    for one decode step, billed at *true per-row positions* — not the
+    dense ``max_len`` rows the pre-paged cache allocated.
+
+    A row at position ``p`` reads its ``p + 1``-entry causal history (k
+    and v each, at storage dtype); a sliding window clamps that to the
+    last ``window`` entries; a block-paged cache rounds the span up to
+    whole pages touched, since the kernel's DMA granularity is the
+    page.  ``positions``: iterable of per-row cache positions (the
+    engine's live slots).
+    """
+    per_tok = 2 * n_kv_heads * head_dim * dtype_bytes(dtype)
+    tokens = 0
+    for p in positions:
+        hi = int(p) + 1                      # rows [0, hi) are live
+        lo = max(0, hi - window) if window > 0 else 0
+        if page_size:
+            tokens += (((hi - 1) // page_size) - (lo // page_size) + 1) \
+                * page_size
+        else:
+            tokens += hi - lo
+    return tokens * per_tok
+
+
 def estimate(tile: TileConfig, p: GemmProblem, chip: TPUChip = TPU_V5E
              ) -> TrafficEstimate:
     pm_, pk, pn = tile.padded_dims(p)

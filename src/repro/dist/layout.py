@@ -225,9 +225,18 @@ def cache_specs(cache, mesh):
     paper's operand-reuse tiling: each device keeps 1/|model| of the
     window resident).  Everything else (conv states, SSM states) shards
     batch only.
+
+    Block-paged caches (``"page_table"`` present) have no batch dim on
+    their k/v leaves — the page pool is shared by every slot, and any
+    page may serve any sequence — so the pool shards its *kv-head* dim
+    over ``'model'`` instead (head-parallel decode keeps each device's
+    table gathers local); ``pos``/``page_table`` row-shard with the
+    slots they index and non-attention layer states keep the dense
+    batch rule.
     """
     sizes = sharding.axis_sizes(mesh)
     model_ok = "model" in sizes
+    paged = isinstance(cache, dict) and "page_table" in cache
 
     def one(path, leaf):
         rank = len(leaf.shape)
@@ -235,6 +244,13 @@ def cache_specs(cache, mesh):
             return P()
         keys = [str(p.key) for p in path
                 if isinstance(p, jax.tree_util.DictKey)]
+        if paged and keys and keys[-1] in ("k", "v"):
+            # (units?, n_pages, page_size, hkv, hd): shard kv heads
+            entries = [None] * rank
+            hdim = rank - 2
+            if model_ok and int(leaf.shape[hdim]) % sizes["model"] == 0:
+                entries[hdim] = "model"
+            return P(*entries)
         stacked = bool(keys) and keys[0] in ("layers", "cross")
         bdim = 1 if stacked and rank >= 2 else 0
         entries: list = [None] * rank

@@ -27,7 +27,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.api import _interpret, _mode, use_pallas  # noqa: F401
 from repro.kernels.blocked_attention import attention_blocked
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
 
 
 def _warn(name: str) -> None:
@@ -144,3 +144,38 @@ def decode_attention(q: jax.Array, k_cache: jax.Array,
                             interpret=_interpret())
     return _decode_attention_xla(q, k_cache, v_cache, pos,
                                  window=window)
+
+
+def _decode_attention_paged_xla(q, k_pages, v_pages, page_table, pos, *,
+                                window):
+    """Reference paged decode: gather each row's pages back into a
+    dense (b, max_pages * page_size, hkv, d) view and reuse the dense
+    path.  Because the engine sizes tables so the gathered length
+    equals the dense ``max_len``, the reductions see identical operand
+    lengths and the result is bit-identical to the dense cache layout —
+    the property the serve acceptance tests pin."""
+    n_pages, ps, hkv, d = k_pages.shape
+    b, max_pages = page_table.shape
+    k = k_pages[page_table].reshape(b, max_pages * ps, hkv, d)
+    v = v_pages[page_table].reshape(b, max_pages * ps, hkv, d)
+    return _decode_attention_xla(q, k, v, pos, window=window)
+
+
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           pos: jax.Array, *,
+                           window: int = 0) -> jax.Array:
+    """Single-token attention over a block-paged KV pool.
+
+    k_pages/v_pages: (n_pages, page_size, hkv, d) shared pool;
+    page_table: (b, max_pages) int32 per-slot tables (entries past a
+    row's live length point at the sink page and are masked by ``pos``).
+    Pallas paged flash-decoding on TPU (the table rides prefetched
+    scalar memory and steers the kv BlockSpec index_map); gather + the
+    dense XLA einsum path elsewhere.
+    """
+    if use_pallas():
+        return flash_decode_paged(q, k_pages, v_pages, page_table, pos,
+                                  window=window, interpret=_interpret())
+    return _decode_attention_paged_xla(q, k_pages, v_pages, page_table,
+                                       pos, window=window)

@@ -141,6 +141,20 @@ def run_trace(engine: DecodeEngine, cfg, args) -> None:
           f"p99 {np.percentile(ttft, 99)*1e3:.0f} ms; "
           f"queue wait: mean {qwait.mean()*1e3:.0f} ms, "
           f"p99 {np.percentile(qwait, 99)*1e3:.0f} ms")
+    if engine.paged:
+        print(f"[serve] paged KV: {m['prefill_chunks']} prefill "
+              f"chunks, max decode stall "
+              f"{m['max_prefill_stall_tokens']} prompt tokens; "
+              f"prefix cache {m['prefix_hits']} hits / "
+              f"{m['prefix_misses']} misses "
+              f"({m['shared_prompt_tokens']} prompt tokens shared)")
+        dense = m["modeled_kv_bytes_dense_rows"]
+        if dense:
+            print(f"[serve] modeled decode KV stream "
+                  f"{m['modeled_kv_bytes'] / 2**20:.2f} MiB at true "
+                  f"positions vs {dense / 2**20:.2f} MiB at dense "
+                  f"max_len rows "
+                  f"({m['modeled_kv_bytes'] / dense:.2f}x)")
 
 
 def run_batch(engine: DecodeEngine, cfg, args) -> None:
@@ -202,6 +216,20 @@ def main() -> None:
                          "warm-up plans; winners persist to the tuning "
                          "cache so a later serve re-plans with zero "
                          "re-measurement")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="block-paged KV cache with this page size "
+                         "(tokens); max_len rounds up to a page "
+                         "multiple")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="KV pool size in pages incl. the sink page "
+                         "(default: dense-equivalent capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split paged admissions into chunks of this "
+                         "many prompt tokens, interleaved with decode "
+                         "bursts")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable content-hash prefix sharing of "
+                         "paged prompt pages")
     ap.add_argument("--int8", action="store_true",
                     help="fused int8 weights, bf16 activations (W8A16)")
     ap.add_argument("--w8a8", action="store_true",
@@ -236,7 +264,17 @@ def main() -> None:
     with shd.use_mesh(mesh):
         engine = DecodeEngine(params, cfg, batch=n_slots,
                               max_len=max_len,
-                              temperature=args.temperature)
+                              temperature=args.temperature,
+                              page_size=args.page_size,
+                              n_pages=args.pages,
+                              prefill_chunk=args.prefill_chunk,
+                              prefix_cache=not args.no_prefix_cache)
+        if engine.paged:
+            print(f"[serve] paged KV: {engine.kv.pool.n_pages - 1} "
+                  f"pages x {engine.page_size} tokens (+1 sink), "
+                  f"{engine.kv.max_pages} pages/slot"
+                  + (f", prefill chunk {engine.prefill_chunk}"
+                     if engine.prefill_chunk else ""))
         bpt = engine.modeled_bytes_per_token()
         mode = "w8a8" if args.w8a8 else \
             ("w8a16" if args.int8 else "bf16")

@@ -255,6 +255,47 @@ def attention_decode(params: dict, x: jax.Array, cache: dict,
     return out, {"k": k_cache, "v": v_cache}
 
 
+def paged_attention_decode(params: dict, x: jax.Array, cache: dict,
+                           page_table: jax.Array, pos: jax.Array,
+                           spec: AttnSpec,
+                           residual: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, dict]:
+    """Single-step decode against a block-paged KV pool.
+
+    ``cache``: {"k", "v"} of (n_pages, page_size, hkv, hd) — one pool
+    shared by every slot; ``page_table``: (b, max_pages) int32 per-slot
+    tables.  Row i's new k/v lands in physical page
+    ``page_table[i, pos[i] // page_size]`` at offset ``pos[i] %
+    page_size``; rows the engine has masked (all-sink tables) write
+    into the reserved sink page, which no live table references.
+    """
+    b, s, _ = x.shape
+    assert s == 1
+    ps = cache["k"].shape[1]
+    max_pages = page_table.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(params, x, spec, positions)
+
+    rows = jnp.arange(b)
+    # clamp so a masked row whose junk position overruns the table still
+    # indexes in-bounds (it lands on the sink page regardless)
+    pages = page_table[rows, jnp.minimum(pos // ps, max_pages - 1)]
+    offs = pos % ps
+    k_cache = cache["k"].at[pages, offs].set(
+        k_new[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[pages, offs].set(
+        v_new[:, 0].astype(cache["v"].dtype))
+    # same CPU-XLA bf16-hoisting workaround as the dense path
+    k_att, v_att = jax.lax.optimization_barrier((k_cache, v_cache))
+
+    out = ops.decode_attention_paged(q[:, 0], k_att, v_att, page_table,
+                                     pos, window=spec.window)
+    out = ops.gemm(out.reshape(b, 1, -1), params["wo"],
+                   residual=residual)
+    return out, {"k": k_cache, "v": v_cache}
+
+
 # ---------------------------------------------------------------------------
 # Embedding + chunked cross-entropy
 # ---------------------------------------------------------------------------

@@ -341,14 +341,19 @@ def _sliding_pos(cfg: ModelConfig, kind: str, pos: jax.Array,
 
 def decode_layer(p: dict, cache: dict, cfg: ModelConfig, kind: str,
                  x: jax.Array, pos: jax.Array,
-                 cross_kv=None) -> Tuple[jax.Array, dict]:
+                 cross_kv=None, page_table=None) -> Tuple[jax.Array, dict]:
     spec = _attn_spec(cfg, kind)
     if kind in ("attn", "local", "moe"):
-        cache_max = cache["k"].shape[1]
         h = _norm(cfg, p["norm1"], x)
-        if spec.window > 0 and cache_max <= spec.window:
+        if page_table is not None:
+            # block-paged pool: windowed layers page at full length and
+            # window-mask in the kernel (the ring-buffer optimization is
+            # a dense-cache feature)
+            x, cache = L.paged_attention_decode(
+                p["attn"], h, cache, page_table, pos, spec, residual=x)
+        elif spec.window > 0 and cache["k"].shape[1] <= spec.window:
             # bounded ring-buffer cache (the long_500k enabler)
-            wpos = _sliding_pos(cfg, kind, pos, cache_max)
+            wpos = _sliding_pos(cfg, kind, pos, cache["k"].shape[1])
             x, cache = _decode_ring(p, cache, spec, h, pos, wpos,
                                     residual=x)
         else:
@@ -426,6 +431,7 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
     x = L.embed(params["embed"], token)
     x = _maybe_abs_pos(cfg, x, pos)
     kinds = cfg.layer_pattern
+    table = cache.get("page_table")
 
     def unit(h, xs):
         p_unit, c_unit, x_unit = xs
@@ -434,7 +440,8 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
             ck = f"u{i}"
             h, new_c[ck] = decode_layer(
                 p_unit[ck], c_unit[ck], cfg, kind, h, pos,
-                cross_kv=x_unit[ck] if x_unit is not None else None)
+                cross_kv=x_unit[ck] if x_unit is not None else None,
+                page_table=table)
         return h, new_c
 
     cross = cache.get("cross")
@@ -446,7 +453,8 @@ def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
         for i, kind in enumerate(cfg.tail_pattern):
             tk = f"t{i}"
             x, new_tail[tk] = decode_layer(
-                params["tail"][tk], cache["tail"][tk], cfg, kind, x, pos)
+                params["tail"][tk], cache["tail"][tk], cfg, kind, x, pos,
+                page_table=table)
         new_cache["tail"] = new_tail
     x = _norm(cfg, params["final_norm"], x)
     logits = ops.gemm(x[:, 0], params["lm_head"], out_dtype=jnp.float32)
@@ -638,3 +646,189 @@ def prefill_into_slot(params: dict, cfg: ModelConfig, tokens: jax.Array,
     logits, sub = prefill(params, cfg, tokens, fresh,
                           prefix_embeds=prefix_embeds, frames=frames)
     return logits, insert_cache_slot(cache, sub, slot)
+
+
+# ---------------------------------------------------------------------------
+# Block-paged KV cache (serve)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
+                     page_size: int, max_pages: int) -> dict:
+    """Decode cache whose attention K/V live in a shared block pool.
+
+    Every attn-family layer gets one {"k", "v"} pool of
+    ``(n_pages, page_size, n_kv_heads, head_dim)``; slots address it
+    through ``cache["page_table"]`` ((batch, max_pages) int32, where
+    entry 0 is the engine's reserved sink page — free or mid-prefill
+    rows stay all-sink so their junk decode writes never touch live
+    pages).  SSM/recurrent layer states are O(1) per slot and stay
+    dense.  Windowed layers page at full length and rely on kernel
+    window masking (the dense path's ring buffer doesn't apply).
+    """
+    assert not cfg.encoder_layers, \
+        "paged cache: encoder-decoder archs unsupported"
+
+    def paged_layer(kind):
+        if kind in ("attn", "local", "moe"):
+            spec = _attn_spec(cfg, kind)
+            shape = (n_pages, page_size, spec.n_kv_heads, spec.head_dim)
+            dt = jnp.dtype(cfg.dtype)
+            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+        return init_layer_cache(cfg, kind, batch, page_size)
+
+    cache: Dict = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "page_table": jnp.zeros((batch, max_pages), jnp.int32),
+        "layers": {},
+    }
+
+    def stack(make):
+        return jax.vmap(lambda _: make())(jnp.arange(cfg.repeats))
+
+    for i, kind in enumerate(cfg.layer_pattern):
+        cache["layers"][f"u{i}"] = stack(
+            lambda kind=kind: paged_layer(kind))
+    if cfg.tail_pattern:
+        cache["tail"] = {f"t{i}": paged_layer(kind)
+                         for i, kind in enumerate(cfg.tail_pattern)}
+    return cache
+
+
+def _prefill_chunk_layer(p: dict, cache: dict, cfg: ModelConfig,
+                         kind: str, x: jax.Array, slot: jax.Array,
+                         table_row: jax.Array, start: int
+                         ) -> Tuple[jax.Array, dict]:
+    """One layer of a fixed-offset prompt chunk against the paged cache.
+
+    ``start`` is static: the chunk's k/v scatter indices into
+    ``table_row`` and the exact-length history slice are compile-time,
+    so the attention call sees operands of exactly ``(s, start + s)``
+    — the same per-row math (and bits) as a full-prompt reference
+    prefill.
+    """
+    b, s, _ = x.shape
+    spec = _attn_spec(cfg, kind)
+    if kind in ("attn", "local", "moe"):
+        h = _norm(cfg, p["norm1"], x)
+        positions = jnp.arange(start, start + s)
+        q, k, v = L._project_qkv(p["attn"], h, spec, positions)
+        ps = cache["k"].shape[1]
+        pages = table_row[jnp.asarray(
+            [(start + j) // ps for j in range(s)])]
+        offs = jnp.asarray([(start + j) % ps for j in range(s)],
+                           jnp.int32)
+        ck = cache["k"].at[pages, offs].set(k[0].astype(cache["k"].dtype))
+        cv = cache["v"].at[pages, offs].set(v[0].astype(cache["v"].dtype))
+        # same CPU-XLA bf16-hoisting workaround as attention_decode
+        ckb, cvb = jax.lax.optimization_barrier((ck, cv))
+        n_hist = -(-(start + s) // ps)            # pages holding history
+        hist = table_row[:n_hist]
+        kf = ckb[hist].reshape(1, n_hist * ps, spec.n_kv_heads,
+                               spec.head_dim)[:, :start + s]
+        vf = cvb[hist].reshape(1, n_hist * ps, spec.n_kv_heads,
+                               spec.head_dim)[:, :start + s]
+        out = ops.attention(q, kf, vf, causal=True, window=spec.window,
+                            q_offset=start)
+        x = ops.gemm(out.reshape(b, s, -1), p["attn"]["wo"], residual=x)
+        cache = {"k": ck, "v": cv}
+        hh = _norm(cfg, p["norm2"], x)
+        if kind == "moe":
+            y, _ = MOE.moe_ffn(p["moe"], hh, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+            x = x + y
+        else:
+            x = _mlp(cfg, p["mlp"], hh, residual=x)
+    elif kind == "ssm":
+        h = _norm(cfg, p["norm1"], x)
+        sub = {kk: jax.lax.dynamic_slice_in_dim(vv, slot, 1, axis=0)
+               for kk, vv in cache.items()}
+        y, new = _mamba2_prefill(p["mixer"], h, sub, cfg.ssm_state)
+        x = x + y
+        cache = {kk: jax.lax.dynamic_update_slice_in_dim(
+            cache[kk], new[kk].astype(cache[kk].dtype), slot, axis=0)
+            for kk in cache}
+    elif kind == "rec":
+        h = _norm(cfg, p["norm1"], x)
+        sub = {kk: jax.lax.dynamic_slice_in_dim(vv, slot, 1, axis=0)
+               for kk, vv in cache.items()}
+        y, new = _rglru_prefill(p["rec"], h, sub)
+        x = x + y
+        cache = {kk: jax.lax.dynamic_update_slice_in_dim(
+            cache[kk], new[kk].astype(cache[kk].dtype), slot, axis=0)
+            for kk in cache}
+        x = _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x), residual=x)
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def prefill_paged_chunk(params: dict, cfg: ModelConfig,
+                        tokens: jax.Array, cache: dict, slot: jax.Array,
+                        table_row: jax.Array, start_pos: int
+                        ) -> Tuple[jax.Array, dict]:
+    """Prefill ONE chunk of a prompt into the paged cache.
+
+    tokens: (1, s) — prompt positions [start_pos, start_pos + s);
+    ``table_row``: the slot's TRUE (max_pages,) int32 table (the device
+    ``cache["page_table"]`` row stays masked/sink until the engine
+    promotes the slot after its last chunk, so interleaved decode
+    bursts can't read a half-written prompt); ``start_pos`` is STATIC —
+    one compiled chunk per (length, offset) pair.
+
+    Prefix sharing enters here too: a prompt whose first ``start_pos``
+    tokens ride cached shared pages prefills only its suffix, attending
+    the shared history through ``table_row``.  Returns (last-position
+    logits (1, V), updated cache) with ``pos[slot] = start_pos + s``.
+    """
+    assert tokens.shape[0] == 1, "chunk prefill admits one request"
+    s = tokens.shape[1]
+    slot = jnp.asarray(slot, jnp.int32)
+    table_row = jnp.asarray(table_row, jnp.int32)
+    x = L.embed(params["embed"], tokens)
+    x = _maybe_abs_pos(cfg, x, start_pos)
+    kinds = cfg.layer_pattern
+
+    def unit(h, xs):
+        p_unit, c_unit = xs
+        new_c = {}
+        for i, kind in enumerate(kinds):
+            ck = f"u{i}"
+            h, new_c[ck] = _prefill_chunk_layer(
+                p_unit[ck], c_unit[ck], cfg, kind, h, slot, table_row,
+                start_pos)
+        return h, new_c
+
+    x, new_layer_cache = jax.lax.scan(
+        unit, x, (params["layers"], cache["layers"]))
+    new_cache = dict(cache, layers=new_layer_cache,
+                     pos=cache["pos"].at[slot].set(start_pos + s))
+    if cfg.tail_pattern:
+        new_tail = {}
+        for i, kind in enumerate(cfg.tail_pattern):
+            tk = f"t{i}"
+            x, new_tail[tk] = _prefill_chunk_layer(
+                params["tail"][tk], cache["tail"][tk], cfg, kind, x,
+                slot, table_row, start_pos)
+        new_cache["tail"] = new_tail
+    x = _norm(cfg, params["final_norm"], x)
+    logits = ops.gemm(x[:, -1], params["lm_head"], out_dtype=jnp.float32)
+    return logits, new_cache
+
+
+def copy_kv_pages(cache: dict, src: jax.Array, dst: jax.Array) -> dict:
+    """Copy physical pages ``src[i] -> dst[i]`` on every paged K/V leaf
+    (the copy-on-write primitive: a slot diverging mid-page gets its own
+    copy of the shared page before it writes).  src/dst: (n,) int32."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def one(path, leaf):
+        keys = [str(p.key) for p in path
+                if isinstance(p, jax.tree_util.DictKey)]
+        if not keys or keys[-1] not in ("k", "v"):
+            return leaf
+        if keys[0] == "layers":            # stacked (repeats, pages, ...)
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])
+
+    return jax.tree_util.tree_map_with_path(one, cache)

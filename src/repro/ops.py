@@ -39,6 +39,7 @@ from repro.kernels.ops import (  # noqa: F401
     BLOCKED_ATTN_THRESHOLD,
     attention,
     decode_attention,
+    decode_attention_paged,
     dequantize,
     quantize_int8,
 )

@@ -38,7 +38,9 @@ import numpy as np
 
 from repro import telemetry
 from repro.configs.base import ModelConfig
+from repro.core import bandwidth
 from repro.models import transformer as T
+from repro.serve import paging
 
 
 # EOS completion is checked on the host only every this-many steps: a
@@ -110,6 +112,7 @@ class RequestResult:
     finished_time: float                 # ... trace supplies one
     queue_wait: float = 0.0              # arrival -> admission seconds
     ttft: float = 0.0                    # arrival -> first sampled token
+    prefill_chunks: int = 1              # chunked-prefill admissions > 1
 
     @property
     def n_tokens(self) -> int:
@@ -183,6 +186,23 @@ class _SlotState:
     first_token_time: float = 0.0        # first token ready (run clock)
     admitted_abs: float = 0.0            # perf_counter absolutes for the
     first_abs: float = 0.0               # ... telemetry lifecycle spans
+    prefill_chunks: int = 1              # admission chunks (paged mode)
+    pos: int = 0                         # cache position (KV billing)
+
+
+@dataclasses.dataclass
+class _PrefillState:
+    """A paged slot mid-admission: its prompt lands in fixed-size chunks
+    interleaved with decode bursts, and the slot only joins the decode
+    batch (device page-table row unmasked, first token sampled) after
+    the last chunk."""
+    req: Request
+    row: np.ndarray                      # true (max_pages,) page table
+    next_pos: int                        # prompt positions written so far
+    chunks: int
+    admitted_time: float
+    admitted_abs: float
+    queue_wait: float
 
 
 class DecodeEngine:
@@ -192,17 +212,38 @@ class DecodeEngine:
     slot is one resident sequence of the live cache); ``temperature`` /
     ``eos_id`` are engine-level defaults that per-request values
     override.
+
+    ``page_size`` switches the KV cache from dense per-slot rows to a
+    block-paged pool (``max_len`` rounds up to a page multiple):
+    ``n_pages`` sizes the pool (default: dense-equivalent capacity,
+    ``slots * max_len / page_size`` plus the reserved sink page),
+    ``prefill_chunk`` splits admissions into fixed-token chunks
+    interleaved with decode bursts, and ``prefix_cache`` enables
+    content-hash prefix sharing (shared prompts prefill once;
+    copy-on-write on the first divergent mid-page append).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, batch: int,
                  max_len: int, temperature: float = 0.0,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = True):
         self.params = params
         self.cfg = cfg
         self.n_slots = self.batch = batch
-        self.max_len = max_len
         self.temperature = temperature
         self.eos_id = eos_id
+        self.paged = page_size is not None
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        if self.paged:
+            # gathered-table length == dense max_len keeps the paged
+            # reductions operand-for-operand identical to the dense
+            # layout (the bit-parity contract); round up, never down
+            max_len = -(-max_len // page_size) * page_size
+        self.max_len = max_len
 
         self._prefill_slot = jax.jit(
             lambda p, toks, cache, slot, frames: T.prefill_into_slot(
@@ -215,6 +256,30 @@ class DecodeEngine:
         self._argmax = jax.jit(
             lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
         self._sample_temp = jax.jit(self._sample_temp_impl)
+
+        self.kv: Optional[paging.PagedKV] = None
+        self._prefilling: Dict[int, _PrefillState] = {}
+        if self.paged:
+            max_pages = max_len // page_size
+            if n_pages is None:
+                n_pages = 1 + self.n_slots * max_pages
+            self.kv = paging.PagedKV(self.n_slots, n_pages, page_size,
+                                     max_pages,
+                                     prefix_cache=prefix_cache)
+            self._table_np = np.full((self.n_slots, max_pages),
+                                     paging.SINK_PAGE, np.int32)
+            # prompt chunks compile per (length, start): the static
+            # start makes the chunk's page-scatter indices and its
+            # exact-length history slice compile-time, which is what
+            # keeps chunked prefill bit-identical to a whole-prompt one
+            self._prefill_chunk_fn = jax.jit(
+                lambda p, toks, cache, slot, row, start:
+                    T.prefill_paged_chunk(p, cfg, toks, cache, slot,
+                                          row, start),
+                static_argnums=(5,), donate_argnums=(2,))
+            self._copy_pages = jax.jit(
+                lambda cache, src, dst: T.copy_kv_pages(cache, src, dst),
+                donate_argnums=(0,))
 
         self._requests: Dict[int, Request] = {}
         self._sched = SlotScheduler(self.n_slots)
@@ -254,7 +319,20 @@ class DecodeEngine:
             "generated_tokens": 0,       # tokens in returned results
             "completed": 0,
             "decode_time": 0.0,          # wall seconds inside bursts
+            "prefill_chunks": 0,         # admission chunks across reqs
+            # longest run of prompt tokens prefilled while >= 1
+            # decode-ready slot sat waiting — the stall chunking bounds
+            "max_prefill_stall_tokens": 0,
+            "prefix_hits": 0,
+            "prefix_misses": 0,
+            "shared_prompt_tokens": 0,   # prompt tokens never prefilled
+            # decode KV traffic billed at true per-row positions
+            # (page-rounded when paged) vs what dense max_len rows
+            # stream — the honest-accounting satellite
+            "modeled_kv_bytes": 0,
+            "modeled_kv_bytes_dense_rows": 0,
         }
+        self._stall_run = 0
 
     def occupancy(self) -> float:
         """Mean fraction of slots serving a live request per decode
@@ -286,6 +364,13 @@ class DecodeEngine:
                 f"(prompt {int(req.prompt.shape[0])} + max_tokens "
                 f"{req.max_tokens} - 1) but the engine was built with "
                 f"max_len={self.max_len}")
+        if self.paged:
+            total = self.kv.total_pages(need)
+            cap = self.kv.pool.n_pages - 1
+            if total > cap:
+                raise ValueError(
+                    f"request needs {total} pages but the pool only has "
+                    f"{cap} allocatable pages")
         rid = self._next_rid
         self._next_rid += 1
         req.rid = rid
@@ -298,8 +383,27 @@ class DecodeEngine:
 
     def _ensure_cache(self) -> None:
         if self._cache is None:
-            self._cache = T.init_cache(self.cfg, self.n_slots,
-                                       self.max_len)
+            if self.paged:
+                self._cache = T.init_paged_cache(
+                    self.cfg, self.n_slots, self.kv.pool.n_pages,
+                    self.page_size, self.kv.max_pages)
+            else:
+                self._cache = T.init_cache(self.cfg, self.n_slots,
+                                           self.max_len)
+
+    def _update_page_gauges(self) -> None:
+        telemetry.gauge("serve.kv_pages_used").set(self.kv.pool.n_used)
+        telemetry.gauge("serve.kv_pages_free").set(self.kv.pool.n_free)
+
+    def _note_prefill_stall(self, n_tokens: int) -> None:
+        """Account ``n_tokens`` of prefill work done while at least one
+        decode-ready slot sat waiting (the stall chunked prefill
+        bounds); a decode burst resets the running stall."""
+        if self._state:
+            self._stall_run += n_tokens
+            self.metrics["max_prefill_stall_tokens"] = max(
+                self.metrics["max_prefill_stall_tokens"],
+                self._stall_run)
 
     def _admit(self, slot: int, req: Request,
                clock: Callable[[], float]) -> None:
@@ -327,6 +431,8 @@ class DecodeEngine:
         self._tok = self._tok.at[slot, 0].set(first[0])
         self._temps[slot] = temp
         self.metrics["prefill_tokens"] += plen
+        self.metrics["prefill_chunks"] += 1
+        self._note_prefill_stall(plen)
         telemetry.counter("serve.prefill_tokens").add(plen)
         telemetry.event("serve.request.admitted", rid=req.rid, slot=slot,
                         queue_wait=queue_wait,
@@ -337,7 +443,100 @@ class DecodeEngine:
             admitted_step=self.metrics["decode_steps"],
             admitted_time=adm_time, queue_wait=queue_wait,
             first_token_time=first_time, admitted_abs=adm_abs,
-            first_abs=time.perf_counter())
+            first_abs=time.perf_counter(), pos=plen)
+
+    def _admit_paged(self, slot: int, req: Request,
+                     clock: Callable[[], float]) -> None:
+        """Map pages for the request and stage its prompt for chunked
+        prefill.  Nothing is computed here beyond a possible
+        copy-on-write page duplication; the slot joins the decode batch
+        when :meth:`_run_prefill_chunk` lands its last chunk."""
+        if req.frames is not None:
+            raise ValueError("paged engine: audio/enc-dec requests "
+                             "unsupported")
+        plen = int(req.prompt.shape[0])
+        adm_time = clock()
+        adm_abs = time.perf_counter()
+        queue_wait = max(adm_time - req.arrival, 0.0)
+        need = plen + req.max_tokens - 1
+        plan = self.kv.admit(slot, req.prompt, need)
+        if plan.cow_src:
+            self._cache = self._copy_pages(
+                self._cache, jnp.asarray(plan.cow_src, jnp.int32),
+                jnp.asarray(plan.cow_dst, jnp.int32))
+        if self.kv.prefix is not None:
+            if plan.prefix_hit:
+                self.metrics["prefix_hits"] += 1
+                telemetry.counter("serve.prefix_cache.hits").add(1)
+            else:
+                self.metrics["prefix_misses"] += 1
+                telemetry.counter("serve.prefix_cache.misses").add(1)
+            self.metrics["shared_prompt_tokens"] += plan.shared_tokens
+        self._update_page_gauges()
+        telemetry.event("serve.request.admitted", rid=req.rid, slot=slot,
+                        queue_wait=queue_wait,
+                        step=self.metrics["decode_steps"],
+                        pages=plan.n_pages,
+                        shared_tokens=plan.shared_tokens)
+        self._prefilling[slot] = _PrefillState(
+            req=req, row=self.kv.table_row(slot),
+            next_pos=plan.shared_tokens, chunks=0,
+            admitted_time=adm_time, admitted_abs=adm_abs,
+            queue_wait=queue_wait)
+
+    def _run_prefill_chunk(self, clock: Callable[[], float]
+                           ) -> Optional[RequestResult]:
+        """Land ONE prompt chunk for the oldest mid-prefill slot.  On
+        the final chunk: sample the first token (the TTFT boundary),
+        unmask the slot's device page-table row, publish its prompt
+        pages to the prefix cache, and promote it to the decode batch.
+        Returns a result only for max_tokens <= 1 requests, which
+        finish at promotion."""
+        slot = next(iter(self._prefilling))
+        st = self._prefilling[slot]
+        req = st.req
+        plen = int(req.prompt.shape[0])
+        csize = self.prefill_chunk or (plen - st.next_pos)
+        chunk = req.prompt[st.next_pos:st.next_pos + csize]
+        s = int(chunk.shape[0])
+        with telemetry.span("serve.prefill_chunk", rid=req.rid,
+                            slot=slot, start=st.next_pos, tokens=s):
+            logits, self._cache = self._prefill_chunk_fn(
+                self.params, jnp.asarray(chunk[None, :], jnp.int32),
+                self._cache, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(st.row), int(st.next_pos))
+        st.next_pos += s
+        st.chunks += 1
+        self.metrics["prefill_tokens"] += s
+        telemetry.counter("serve.prefill_tokens").add(s)
+        self._note_prefill_stall(s)
+        if st.next_pos < plen:
+            return None
+
+        temp = np.float32(req.temperature)
+        first = self._sample(logits, temp[None])
+        jax.block_until_ready(first)
+        first_time = clock()
+        del self._prefilling[slot]
+        self._tok = self._tok.at[slot, 0].set(first[0])
+        self._temps[slot] = temp
+        self._table_np[slot] = st.row
+        self._cache["page_table"] = jnp.asarray(self._table_np)
+        self.kv.register_prefix(slot, req.prompt)
+        self.metrics["prefill_chunks"] += st.chunks
+        self._update_page_gauges()
+        self._state[slot] = _SlotState(
+            req=req, gen=[], first_dev=first[0],
+            remaining=req.max_tokens - 1,
+            admitted_step=self.metrics["decode_steps"],
+            admitted_time=st.admitted_time, queue_wait=st.queue_wait,
+            first_token_time=first_time, admitted_abs=st.admitted_abs,
+            first_abs=time.perf_counter(), prefill_chunks=st.chunks,
+            pos=plen)
+        if req.max_tokens <= 1:
+            self._sync_slot(slot, None, None)
+            return self._finish(slot, clock())
+        return None
 
     def _finish(self, slot: int, now: float) -> RequestResult:
         """Truncate at EOS / max_tokens, emit the result, free the slot
@@ -355,6 +554,11 @@ class DecodeEngine:
             toks = toks[:toks.index(eos) + 1]
         self._temps[slot] = 0.0
         self._sched.release(slot)
+        if self.paged:
+            self.kv.release(slot)
+            self._table_np[slot] = paging.SINK_PAGE
+            self._cache["page_table"] = jnp.asarray(self._table_np)
+            self._update_page_gauges()
         self._requests.pop(req.rid, None)
         self.metrics["generated_tokens"] += len(toks)
         self.metrics["completed"] += 1
@@ -387,7 +591,8 @@ class DecodeEngine:
             finished_step=self.metrics["decode_steps"],
             arrival=req.arrival,
             admitted_time=st.admitted_time, finished_time=now,
-            queue_wait=st.queue_wait, ttft=ttft)
+            queue_wait=st.queue_wait, ttft=ttft,
+            prefill_chunks=st.prefill_chunks)
 
     def _sync_slot(self, slot: int, burst_host: Optional[np.ndarray],
                    col: Optional[int]) -> None:
@@ -433,17 +638,40 @@ class DecodeEngine:
             # ---- admissions: fill every free slot with an arrived req
             while self._sched.queue and self._sched._free and \
                     self._requests[self._sched.queue[0]].arrival <= now():
+                req = self._requests[self._sched.queue[0]]
+                if self.paged:
+                    # one admission in flight at a time: the next
+                    # request's prefix match must see this prompt's
+                    # pages, which only publish when its last chunk
+                    # lands — identical prompts arriving together
+                    # still share
+                    if self._prefilling:
+                        break
+                    need = int(req.prompt.shape[0]) + req.max_tokens - 1
+                    if not self.kv.can_admit(req.prompt, need) and \
+                            not self.kv.try_reclaim(req.prompt, need):
+                        break   # head-of-line waits for freed pages
                 slot, rid = self._sched.admit()
-                req = self._requests[rid]
+                if self.paged:
+                    self._admit_paged(slot, req, clock)
+                    continue    # finishes (if ever) at promotion
                 self._admit(slot, req, clock)
                 if req.max_tokens <= 1:
                     self._sync_slot(slot, None, None)
                     done.append(self._finish(slot, clock()))
 
-            active = self._sched.active_slots
+            # ---- chunked prefill: one chunk of the oldest admission,
+            #      interleaved with the decode bursts below
+            if self._prefilling:
+                r = self._run_prefill_chunk(clock)
+                if r is not None:
+                    done.append(r)
+
+            active = [s for s in self._sched.active_slots
+                      if s in self._state]
             telemetry.gauge("serve.slots_active").set(len(active))
             if not active:
-                if self._sched.queue:
+                if self._sched.queue and not self._prefilling:
                     time.sleep(poll)       # waiting on the next arrival
                 continue
 
@@ -466,8 +694,16 @@ class DecodeEngine:
             self.metrics["decode_steps"] += len(burst)
             self.metrics["useful_slot_steps"] += len(burst) * len(active)
             telemetry.counter("serve.decode_steps").add(len(burst))
+            self._stall_run = 0            # decode ran; stall over
+            for j in range(len(burst)):    # KV billed at true positions
+                self.metrics["modeled_kv_bytes"] += \
+                    self.modeled_kv_bytes_per_step(
+                        [self._state[s].pos + j for s in active])
+            self.metrics["modeled_kv_bytes_dense_rows"] += \
+                len(burst) * self._dense_rows_kv_bytes_per_step()
             for s in active:
                 self._state[s].remaining -= len(burst)
+                self._state[s].pos += len(burst)
 
             # ---- sync + completions
             host = np.asarray(jnp.stack(burst, axis=0))   # (k, n_slots)
@@ -511,11 +747,64 @@ class DecodeEngine:
             out[i, :r.n_tokens] = r.tokens
         return GenerationResult(tokens=out, steps=steps)
 
-    def modeled_bytes_per_token(self) -> int:
-        """Modeled HBM weight traffic of ONE batched decode step (the
-        whole slot pool shares it): every GEMM projection leaf streams
-        through VMEM once per step, at its storage width — one
-        byte/element + scale vector for fused-int8 weights, two for
-        bf16.  This is the term the mixed-precision path halves."""
+    # ------------------------------------------------------- cost model
+
+    def _attn_layer_windows(self) -> List[tuple]:
+        """(window, layer_count) per attn-family layer kind in the
+        stack — the layers that stream KV cache every decode step."""
+        cfg = self.cfg
+        out = []
+        for kind in cfg.layer_pattern:
+            if kind in ("attn", "moe"):
+                out.append((cfg.window, cfg.repeats))
+            elif kind == "local":
+                out.append((cfg.local_window, cfg.repeats))
+        for kind in cfg.tail_pattern:
+            if kind in ("attn", "moe"):
+                out.append((cfg.window, 1))
+            elif kind == "local":
+                out.append((cfg.local_window, 1))
+        return out
+
+    def modeled_kv_bytes_per_step(self, positions) -> int:
+        """Modeled KV-cache HBM bytes one batched decode step streams,
+        billed at the given true per-row positions (window-clamped;
+        page-rounded when the cache is paged)."""
+        cfg = self.cfg
+        total = 0
+        for window, count in self._attn_layer_windows():
+            total += count * bandwidth.decode_kv_bytes(
+                positions, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                dtype=cfg.dtype, window=window,
+                page_size=self.page_size)
+        return total
+
+    def _dense_rows_kv_bytes_per_step(self) -> int:
+        """What dense per-slot rows stream per step: every slot's full
+        ``max_len`` allocation (window-clamped for ring layers),
+        regardless of true positions — the overstatement the paged
+        billing corrects."""
+        cfg = self.cfg
+        positions = [self.max_len - 1] * self.n_slots
+        total = 0
+        for window, count in self._attn_layer_windows():
+            total += count * bandwidth.decode_kv_bytes(
+                positions, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                dtype=cfg.dtype, window=window)
+        return total
+
+    def modeled_bytes_per_token(self, positions=None) -> int:
+        """Modeled HBM traffic of ONE batched decode step (the whole
+        slot pool shares it): the GEMM weight stream (every projection
+        leaf through VMEM once, at storage width — the term the
+        mixed-precision path halves) plus the KV-cache stream billed at
+        true per-row positions (live slots by default; pages touched,
+        not ``max_len`` rows)."""
         from repro import quant
-        return quant.gemm_weight_bytes(self.params)
+        total = quant.gemm_weight_bytes(self.params)
+        if positions is None:
+            positions = [self._state[s].pos
+                         for s in sorted(self._state)]
+        if positions:
+            total += self.modeled_kv_bytes_per_step(positions)
+        return total

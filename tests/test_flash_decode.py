@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_decode import flash_decode
-from repro.kernels.ops import _decode_attention_xla
+from repro.kernels.flash_decode import flash_decode, flash_decode_paged
+from repro.kernels.ops import (_decode_attention_paged_xla,
+                               _decode_attention_xla)
 from repro.kernels.ref import decode_attention_ref
 
 
@@ -133,4 +134,110 @@ def test_ragged_masked_slots_do_not_leak():
         k2 = k2.at[i, p + 1:].set(99.0)
         v2 = v2.at[i, p + 1:].set(-99.0)
     got = flash_decode(q, k2, v2, pos, bkv=128, interpret=True)
+    np.testing.assert_allclose(got, base, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Block-paged decode: the page table steers the kv BlockSpec index_map;
+# any table permutation of the same logical cache must reproduce the
+# dense result.
+# ---------------------------------------------------------------------------
+
+def _paginate(k, v, ps, seed=0):
+    """Scatter a dense (b, skv, hkv, d) cache into a randomly permuted
+    page pool + per-row tables (page 0 = reserved sink, left zero)."""
+    b, skv, hkv, d = k.shape
+    mp = skv // ps
+    rng = np.random.default_rng(seed)
+    table = (rng.permutation(b * mp) + 1).reshape(b, mp).astype(np.int32)
+    kp = np.zeros((1 + b * mp, ps, hkv, d), np.asarray(k).dtype)
+    vp = np.zeros_like(kp)
+    kn, vn = np.asarray(k), np.asarray(v)
+    for i in range(b):
+        for j in range(mp):
+            kp[table[i, j]] = kn[i, j * ps:(j + 1) * ps]
+            vp[table[i, j]] = vn[i, j * ps:(j + 1) * ps]
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(table)
+
+
+PAGED_POS = [3, 130, 0, 255]
+
+
+@pytest.mark.parametrize("hq,hkv,d", [
+    (4, 4, 64),        # MHA
+    (8, 2, 64),        # GQA groups=4
+    (16, 1, 128),      # MQA groups=16
+])
+@pytest.mark.parametrize("window", [0, 32])
+def test_paged_kernel_bitwise_at_page_eq_block(hq, hkv, d, window):
+    """page_size == the dense kernel's kv block size -> identical block
+    accumulation order -> BIT-identical output under any table
+    permutation (the serve acceptance contract)."""
+    q, k, v = _mk(4, 256, hq, hkv, d, jnp.float32, seed=13)
+    pos = jnp.asarray(PAGED_POS, jnp.int32)
+    kp, vp, tbl = _paginate(k, v, 128, seed=1)
+    dense = flash_decode(q, k, v, pos, window=window, bkv=128,
+                         interpret=True)
+    got = flash_decode_paged(q, kp, vp, tbl, pos, window=window,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+
+@pytest.mark.parametrize("ps", [8, 32])
+def test_paged_kernel_matches_oracle_small_pages(ps):
+    q, k, v = _mk(4, 64, 8, 2, 64, jnp.float32, seed=17)
+    pos = jnp.asarray(RAGGED_POS, jnp.int32)
+    kp, vp, tbl = _paginate(k, v, ps, seed=2)
+    want = decode_attention_ref(q, k, v, pos)
+    got = flash_decode_paged(q, kp, vp, tbl, pos, interpret=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_paged_kernel_sliding_window(window):
+    q, k, v = _mk(2, 256, 8, 4, 64, jnp.float32, seed=19)
+    pos = jnp.asarray([200, 255], jnp.int32)
+    kp, vp, tbl = _paginate(k, v, 16, seed=3)
+    want = decode_attention_ref(q, k, v, pos, window=window)
+    got = flash_decode_paged(q, kp, vp, tbl, pos, window=window,
+                             interpret=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_paged_xla_gather_bitwise_vs_dense():
+    """The XLA paged path gathers the table back into the dense layout,
+    so equal gathered length -> bit-identical to the dense XLA path (the
+    property the engine's max_len page-rounding relies on)."""
+    q, k, v = _mk(4, 64, 8, 2, 64, jnp.bfloat16, seed=21)
+    pos = jnp.asarray(RAGGED_POS, jnp.int32)
+    kp, vp, tbl = _paginate(k, v, 16, seed=4)
+    dense = _decode_attention_xla(q, k, v, pos, window=0)
+    got = _decode_attention_paged_xla(q, kp, vp, tbl, pos, window=0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+
+
+def test_paged_masked_pages_do_not_leak():
+    """Sink-page garbage and per-row positions past ``pos`` never reach
+    a row's output: point every wholly-masked table entry at a poisoned
+    sink and poison the masked tail of each row's live pages."""
+    ps = 16
+    q, k, v = _mk(4, 64, 8, 2, 64, jnp.float32, seed=23)
+    pos = jnp.asarray(RAGGED_POS, jnp.int32)
+    kp, vp, tbl = _paginate(k, v, ps, seed=5)
+    base = flash_decode_paged(q, kp, vp, tbl, pos, interpret=True)
+    kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+    tbl2 = np.asarray(tbl).copy()
+    kp2[0], vp2[0] = 99.0, -99.0             # poisoned sink
+    for i, p in enumerate(RAGGED_POS):
+        for j in range(tbl2.shape[1]):
+            if j * ps > p:                   # page wholly past pos
+                tbl2[i, j] = 0
+            else:                            # poison the masked tail
+                page = tbl2[i, j]
+                for t in range(ps):
+                    if j * ps + t > p:
+                        kp2[page, t] = 99.0
+                        vp2[page, t] = -99.0
+    got = flash_decode_paged(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                             jnp.asarray(tbl2), pos, interpret=True)
     np.testing.assert_allclose(got, base, atol=2e-5, rtol=2e-5)

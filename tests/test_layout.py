@@ -108,3 +108,25 @@ def test_cache_specs_tail_unstacked():
     # scanned local-attn cache still (repeats, batch, seq, ...)
     k_spec = specs["layers"]["u2"]["k"]
     assert k_spec[1] == "data" and k_spec[2] == "model"
+
+
+def test_cache_specs_paged_pool_shards_kv_heads():
+    """Block-paged cache: k/v pool leaves have no batch dim (any page
+    serves any slot), so they shard kv-heads over 'model' instead;
+    pos/page_table row-shard with the slots they index."""
+    cfg = get_config("minitron-8b")          # n_kv_heads=8
+    mesh = FakeMesh((2, 8), ("data", "model"))
+    cache = jax.eval_shape(lambda: T.init_paged_cache(
+        cfg, 128, n_pages=1024, page_size=64, max_pages=512))
+    specs = layout.cache_specs(cache, mesh)
+    # (repeats, n_pages, page_size, kv_heads, head_dim)
+    assert specs["layers"]["u0"]["k"] == P(None, None, None, "model",
+                                           None)
+    assert specs["layers"]["u0"]["v"] == P(None, None, None, "model",
+                                           None)
+    assert specs["pos"] == P("data")
+    assert specs["page_table"] == P("data", None)
+    # kv heads that don't divide 'model' relax to replicated
+    specs16 = layout.cache_specs(cache, MESH)
+    assert specs16["layers"]["u0"]["k"] == P(None, None, None, None,
+                                             None)
