@@ -153,20 +153,21 @@ def decode_kv_bytes(positions, *, n_kv_heads: int, head_dim: int,
 
     A row at position ``p`` reads its ``p + 1``-entry causal history (k
     and v each, at storage dtype); a sliding window clamps that to the
-    last ``window`` entries; a block-paged cache rounds the span up to
-    whole pages touched, since the kernel's DMA granularity is the
-    page.  ``positions``: iterable of per-row cache positions (the
-    engine's live slots).
+    last ``window`` entries.  A block-paged cache bills whole pages
+    ``[0, ceil((p + 1) / page_size))`` and IGNORES the window: the
+    paged kernel has no ring buffer — windowed layers page at full
+    length and mask in-VMEM, so every history page moves regardless of
+    the window span.  ``positions``: iterable of per-row cache
+    positions (the engine's live slots).
     """
     per_tok = 2 * n_kv_heads * head_dim * dtype_bytes(dtype)
     tokens = 0
     for p in positions:
         hi = int(p) + 1                      # rows [0, hi) are live
-        lo = max(0, hi - window) if window > 0 else 0
         if page_size:
-            tokens += (((hi - 1) // page_size) - (lo // page_size) + 1) \
-                * page_size
+            tokens += -(-hi // page_size) * page_size
         else:
+            lo = max(0, hi - window) if window > 0 else 0
             tokens += hi - lo
     return tokens * per_tok
 

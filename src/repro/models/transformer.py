@@ -661,20 +661,27 @@ def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
     through ``cache["page_table"]`` ((batch, max_pages) int32, where
     entry 0 is the engine's reserved sink page — free or mid-prefill
     rows stay all-sink so their junk decode writes never touch live
-    pages).  SSM/recurrent layer states are O(1) per slot and stay
-    dense.  Windowed layers page at full length and rely on kernel
+    pages).  Windowed layers page at full length and rely on kernel
     window masking (the dense path's ring buffer doesn't apply).
+
+    Recurrent layer kinds (ssm/rec) are rejected: their per-slot state
+    has no page-table indirection, so chunked prefill would reuse the
+    slot's stale state, interleaved decode bursts would mutate a
+    mid-prefill slot's recurrence (only attention writes are
+    sink-masked), and prefix sharing can't skip tokens through a
+    recurrence.  Those archs serve through the dense engine.
     """
     assert not cfg.encoder_layers, \
         "paged cache: encoder-decoder archs unsupported"
+    bad = sorted({k for k in cfg.all_kinds if k in ("ssm", "rec")})
+    assert not bad, \
+        f"paged cache: recurrent layer kinds {bad} unsupported"
 
     def paged_layer(kind):
-        if kind in ("attn", "local", "moe"):
-            spec = _attn_spec(cfg, kind)
-            shape = (n_pages, page_size, spec.n_kv_heads, spec.head_dim)
-            dt = jnp.dtype(cfg.dtype)
-            return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
-        return init_layer_cache(cfg, kind, batch, page_size)
+        spec = _attn_spec(cfg, kind)
+        shape = (n_pages, page_size, spec.n_kv_heads, spec.head_dim)
+        dt = jnp.dtype(cfg.dtype)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
     cache: Dict = {
         "pos": jnp.zeros((batch,), jnp.int32),
@@ -695,7 +702,7 @@ def init_paged_cache(cfg: ModelConfig, batch: int, n_pages: int,
 
 
 def _prefill_chunk_layer(p: dict, cache: dict, cfg: ModelConfig,
-                         kind: str, x: jax.Array, slot: jax.Array,
+                         kind: str, x: jax.Array,
                          table_row: jax.Array, start: int
                          ) -> Tuple[jax.Array, dict]:
     """One layer of a fixed-offset prompt chunk against the paged cache.
@@ -704,61 +711,43 @@ def _prefill_chunk_layer(p: dict, cache: dict, cfg: ModelConfig,
     ``table_row`` and the exact-length history slice are compile-time,
     so the attention call sees operands of exactly ``(s, start + s)``
     — the same per-row math (and bits) as a full-prompt reference
-    prefill.
+    prefill.  Only attn-family kinds exist here —
+    :func:`init_paged_cache` rejects recurrent stacks.
     """
     b, s, _ = x.shape
+    if kind not in ("attn", "local", "moe"):
+        raise ValueError(f"paged chunk prefill: unsupported layer "
+                         f"kind {kind!r}")
     spec = _attn_spec(cfg, kind)
-    if kind in ("attn", "local", "moe"):
-        h = _norm(cfg, p["norm1"], x)
-        positions = jnp.arange(start, start + s)
-        q, k, v = L._project_qkv(p["attn"], h, spec, positions)
-        ps = cache["k"].shape[1]
-        pages = table_row[jnp.asarray(
-            [(start + j) // ps for j in range(s)])]
-        offs = jnp.asarray([(start + j) % ps for j in range(s)],
-                           jnp.int32)
-        ck = cache["k"].at[pages, offs].set(k[0].astype(cache["k"].dtype))
-        cv = cache["v"].at[pages, offs].set(v[0].astype(cache["v"].dtype))
-        # same CPU-XLA bf16-hoisting workaround as attention_decode
-        ckb, cvb = jax.lax.optimization_barrier((ck, cv))
-        n_hist = -(-(start + s) // ps)            # pages holding history
-        hist = table_row[:n_hist]
-        kf = ckb[hist].reshape(1, n_hist * ps, spec.n_kv_heads,
-                               spec.head_dim)[:, :start + s]
-        vf = cvb[hist].reshape(1, n_hist * ps, spec.n_kv_heads,
-                               spec.head_dim)[:, :start + s]
-        out = ops.attention(q, kf, vf, causal=True, window=spec.window,
-                            q_offset=start)
-        x = ops.gemm(out.reshape(b, s, -1), p["attn"]["wo"], residual=x)
-        cache = {"k": ck, "v": cv}
-        hh = _norm(cfg, p["norm2"], x)
-        if kind == "moe":
-            y, _ = MOE.moe_ffn(p["moe"], hh, top_k=cfg.top_k,
-                               capacity_factor=cfg.capacity_factor)
-            x = x + y
-        else:
-            x = _mlp(cfg, p["mlp"], hh, residual=x)
-    elif kind == "ssm":
-        h = _norm(cfg, p["norm1"], x)
-        sub = {kk: jax.lax.dynamic_slice_in_dim(vv, slot, 1, axis=0)
-               for kk, vv in cache.items()}
-        y, new = _mamba2_prefill(p["mixer"], h, sub, cfg.ssm_state)
+    h = _norm(cfg, p["norm1"], x)
+    positions = jnp.arange(start, start + s)
+    q, k, v = L._project_qkv(p["attn"], h, spec, positions)
+    ps = cache["k"].shape[1]
+    pages = table_row[jnp.asarray(
+        [(start + j) // ps for j in range(s)])]
+    offs = jnp.asarray([(start + j) % ps for j in range(s)],
+                       jnp.int32)
+    ck = cache["k"].at[pages, offs].set(k[0].astype(cache["k"].dtype))
+    cv = cache["v"].at[pages, offs].set(v[0].astype(cache["v"].dtype))
+    # same CPU-XLA bf16-hoisting workaround as attention_decode
+    ckb, cvb = jax.lax.optimization_barrier((ck, cv))
+    n_hist = -(-(start + s) // ps)            # pages holding history
+    hist = table_row[:n_hist]
+    kf = ckb[hist].reshape(1, n_hist * ps, spec.n_kv_heads,
+                           spec.head_dim)[:, :start + s]
+    vf = cvb[hist].reshape(1, n_hist * ps, spec.n_kv_heads,
+                           spec.head_dim)[:, :start + s]
+    out = ops.attention(q, kf, vf, causal=True, window=spec.window,
+                        q_offset=start)
+    x = ops.gemm(out.reshape(b, s, -1), p["attn"]["wo"], residual=x)
+    cache = {"k": ck, "v": cv}
+    hh = _norm(cfg, p["norm2"], x)
+    if kind == "moe":
+        y, _ = MOE.moe_ffn(p["moe"], hh, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor)
         x = x + y
-        cache = {kk: jax.lax.dynamic_update_slice_in_dim(
-            cache[kk], new[kk].astype(cache[kk].dtype), slot, axis=0)
-            for kk in cache}
-    elif kind == "rec":
-        h = _norm(cfg, p["norm1"], x)
-        sub = {kk: jax.lax.dynamic_slice_in_dim(vv, slot, 1, axis=0)
-               for kk, vv in cache.items()}
-        y, new = _rglru_prefill(p["rec"], h, sub)
-        x = x + y
-        cache = {kk: jax.lax.dynamic_update_slice_in_dim(
-            cache[kk], new[kk].astype(cache[kk].dtype), slot, axis=0)
-            for kk in cache}
-        x = _mlp(cfg, p["mlp"], _norm(cfg, p["norm2"], x), residual=x)
     else:
-        raise ValueError(kind)
+        x = _mlp(cfg, p["mlp"], hh, residual=x)
     return x, cache
 
 
@@ -794,7 +783,7 @@ def prefill_paged_chunk(params: dict, cfg: ModelConfig,
         for i, kind in enumerate(kinds):
             ck = f"u{i}"
             h, new_c[ck] = _prefill_chunk_layer(
-                p_unit[ck], c_unit[ck], cfg, kind, h, slot, table_row,
+                p_unit[ck], c_unit[ck], cfg, kind, h, table_row,
                 start_pos)
         return h, new_c
 
@@ -808,7 +797,7 @@ def prefill_paged_chunk(params: dict, cfg: ModelConfig,
             tk = f"t{i}"
             x, new_tail[tk] = _prefill_chunk_layer(
                 params["tail"][tk], cache["tail"][tk], cfg, kind, x,
-                slot, table_row, start_pos)
+                table_row, start_pos)
         new_cache["tail"] = new_tail
     x = _norm(cfg, params["final_norm"], x)
     logits = ops.gemm(x[:, -1], params["lm_head"], out_dtype=jnp.float32)

@@ -239,6 +239,21 @@ class DecodeEngine:
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk
         if self.paged:
+            # only attn-family stacks page: recurrent state has no
+            # page-table indirection, so chunked prefill would reuse
+            # stale slot state, decode bursts would mutate mid-prefill
+            # recurrence (only attention writes are sink-masked), and
+            # prefix sharing can't skip tokens through a recurrence
+            bad = sorted({k for k in cfg.all_kinds
+                          if k in ("ssm", "rec")})
+            if bad:
+                raise ValueError(
+                    f"paged engine: recurrent layer kinds {bad} "
+                    f"unsupported (arch {cfg.name}); use the dense "
+                    "engine")
+            if cfg.encoder_layers:
+                raise ValueError("paged engine: encoder-decoder archs "
+                                 "unsupported")
             # gathered-table length == dense max_len keeps the paged
             # reductions operand-for-operand identical to the dense
             # layout (the bit-parity contract); round up, never down
@@ -365,6 +380,11 @@ class DecodeEngine:
                 f"{req.max_tokens} - 1) but the engine was built with "
                 f"max_len={self.max_len}")
         if self.paged:
+            if req.frames is not None:
+                # reject here, not at admission inside the serve loop —
+                # a bad request must not crash a mid-trace run
+                raise ValueError("paged engine: audio/enc-dec requests "
+                                 "unsupported")
             total = self.kv.total_pages(need)
             cap = self.kv.pool.n_pages - 1
             if total > cap:
@@ -768,8 +788,9 @@ class DecodeEngine:
 
     def modeled_kv_bytes_per_step(self, positions) -> int:
         """Modeled KV-cache HBM bytes one batched decode step streams,
-        billed at the given true per-row positions (window-clamped;
-        page-rounded when the cache is paged)."""
+        billed at the given true per-row positions (window-clamped when
+        dense; whole history pages when paged — the paged kernel masks
+        windows in-VMEM, so windowed layers still move every page)."""
         cfg = self.cfg
         total = 0
         for window, count in self._attn_layer_windows():

@@ -101,8 +101,15 @@ class PrefixCache:
     prompt.  ``register`` inserts a finished prompt's pages (bumping
     their refcount so slot release can't reclaim them).  ``evict``
     drops least-recently-used entries whose page nobody else references
-    — deepest pages first, so a chain never loses a middle link while a
-    deeper link stays cached.
+    — deepest pages first, so a chain never loses a shallow link while a
+    deeper link stays cached (an entry whose chain head is gone can
+    never match again, yet would keep its page refcounted forever).
+
+    Every key touched by one match/register walk gets the SAME lru
+    stamp: a walk always starts at the chain head, so within a chain a
+    deeper entry is never newer than a shallower one, and the
+    deepest-first (``-tokens``) tie-break decides eviction order inside
+    a walk.
     """
 
     def __init__(self, page_size: int):
@@ -134,6 +141,8 @@ class PrefixCache:
         ps = self.page_size
         pages: List[int] = []
         covered = 0
+        if not peek:
+            self._clock += 1            # one stamp for the whole walk
         for i in range(_ceil_div(plen, ps)):
             n = min((i + 1) * ps, plen)
             key = self._key(toks, n)
@@ -142,7 +151,6 @@ class PrefixCache:
             pages.append(self._page[key])
             covered = n
             if not peek:
-                self._clock += 1
                 self._used[key] = self._clock
         if not peek:
             if covered > 0:
@@ -155,22 +163,23 @@ class PrefixCache:
                  pool: PagePool) -> int:
         """Cache ``pages`` as the prefix chain for ``tokens``; returns
         how many new entries were inserted (already-cached prefixes are
-        left alone, so a re-registered prompt is a no-op)."""
+        left alone, so a re-registered prompt is a no-op — but the whole
+        chain is LRU-stamped, so extending a chain never leaves its head
+        older than the new deeper links)."""
         toks = np.asarray(tokens, dtype=np.int32)
         plen = len(toks)
         ps = self.page_size
         added = 0
+        self._clock += 1                # one stamp for the whole walk
         for i, page in enumerate(pages):
             n = min((i + 1) * ps, plen)
             key = self._key(toks, n)
-            if key in self._page:
-                continue
-            pool.ref(page)
-            self._page[key] = page
-            self._tokens[key] = n
-            self._clock += 1
+            if key not in self._page:
+                pool.ref(page)
+                self._page[key] = page
+                self._tokens[key] = n
+                added += 1
             self._used[key] = self._clock
-            added += 1
         return added
 
     def evict(self, pool: PagePool, n_pages: int) -> int:

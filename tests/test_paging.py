@@ -119,6 +119,52 @@ def test_prefix_cache_match_register_evict():
     assert cache.match(toks, peek=True)[1] == 4   # chain head survives
 
 
+def test_prefix_cache_evicts_deepest_first():
+    """One register/match walk stamps its whole chain with one lru
+    clock, so eviction drops the DEEPEST link first — never a chain
+    head whose orphaned descendants could no longer match yet would
+    keep their pages refcounted."""
+    pool = PagePool(8)
+    cache = PrefixCache(page_size=4)
+    toks = np.arange(12, dtype=np.int32)     # 3 full pages
+    pages = [pool.alloc() for _ in range(3)]
+    cache.register(toks, pages, pool)
+    for p in pages:                          # slot releases its refs
+        pool.free(p)
+    assert cache.evict(pool, 1) == 1
+    # the deepest entry went; head + middle still match
+    got, covered = cache.match(toks, peek=True)
+    assert got == pages[:2] and covered == 8
+    assert pool.refcount(pages[2]) == 0      # page actually freed
+    # a later touch of the head alone must not make deeper entries
+    # look fresher than it
+    cache.match(toks[:4])
+    assert cache.evict(pool, 1) == 1
+    assert cache.match(toks[:4], peek=True)[1] == 4   # head survives
+    assert pool.refcount(pages[1]) == 0
+
+
+def test_prefix_cache_register_restamps_existing_chain():
+    """Extending a cached chain re-stamps the shallow links too, so a
+    chain never ends up with a head older than its new deeper links
+    (the orphaning order the per-key clock allowed)."""
+    pool = PagePool(8)
+    cache = PrefixCache(page_size=4)
+    toks = np.arange(12, dtype=np.int32)
+    pages = [pool.alloc() for _ in range(3)]
+    cache.register(toks[:4], pages[:1], pool)
+    # a different chain touched in between would otherwise out-age it
+    other = np.arange(100, 104, dtype=np.int32)
+    cache.register(other, [pool.alloc()], pool)
+    cache.register(toks, pages, pool)        # extend the first chain
+    for p in pages:
+        pool.free(p)
+    assert cache.evict(pool, 2) == 2
+    # eviction took the first chain's two deepest links, not its head
+    assert cache.match(toks, peek=True)[1] == 4
+    assert cache.match(other, peek=True)[1] == 4
+
+
 def test_paged_kv_admit_shares_full_pages():
     kv = PagedKV(n_slots=2, n_pages=9, page_size=4, max_pages=4)
     toks = np.arange(8, dtype=np.int32)
@@ -187,8 +233,11 @@ def test_decode_kv_bytes():
     # paged billing rounds the span up to whole pages touched
     assert decode_kv_bytes([9], n_kv_heads=2, head_dim=64,
                            page_size=8) == 16 * per_tok
+    # paged + window: the paged kernel has no ring buffer — windowed
+    # layers page the FULL history and mask in-VMEM, so billing ignores
+    # the window (pages 0..13, not just the window span)
     assert decode_kv_bytes([99], n_kv_heads=2, head_dim=64, window=32,
-                           page_size=8) == 40 * per_tok  # pages 8..12
+                           page_size=8) == 104 * per_tok
     # per-row sum and dtype width
     assert decode_kv_bytes([3, 7], n_kv_heads=2, head_dim=64,
                            dtype="float32") == (4 + 8) * 2 * per_tok
@@ -294,3 +343,27 @@ def test_submit_rejects_oversized_paged_request(smoke):
                        n_pages=1 + 2)        # 2 usable pages = 32 tokens
     with pytest.raises(ValueError, match="pages"):
         eng.submit(Request(prompt=np.zeros(40, np.int32), max_tokens=8))
+
+
+def test_submit_rejects_frames_on_paged_engine(smoke):
+    """A frames-carrying request must bounce at submit(), not blow up
+    the serve loop mid-trace at admission."""
+    cfg, params, _ = smoke
+    eng = DecodeEngine(params, cfg, batch=1, max_len=64, page_size=16)
+    with pytest.raises(ValueError, match="audio"):
+        eng.submit(Request(prompt=np.zeros(4, np.int32), max_tokens=2,
+                           frames=np.zeros((3, 8), np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "recurrentgemma-9b"])
+def test_paged_engine_rejects_recurrent_archs(arch):
+    """ssm/rec stacks have per-slot recurrent state the page pool can't
+    protect (stale state across chunked prefill, decode-burst writes
+    into mid-prefill slots, no recurrence skip for shared prefixes) —
+    the paged engine refuses them up front."""
+    cfg = get_smoke_config(arch)
+    with pytest.raises(ValueError, match="recurrent"):
+        DecodeEngine({}, cfg, batch=1, max_len=64, page_size=16)
+    with pytest.raises(AssertionError, match="recurrent"):
+        jax.eval_shape(lambda: T.init_paged_cache(
+            cfg, 1, n_pages=5, page_size=16, max_pages=4))
