@@ -8,9 +8,10 @@ throughput numbers come from the roofline analysis (the container has
 no TPU).
 
 Also writes ``BENCH_gemm.json`` (rows + the fused-vs-unfused SwiGLU
-modeled-HBM ratios + the plan-cache counters proving the DSE resolves
-once per unique spec+shape); the pallas-interpret CI job uploads it as
-an artifact.
+modeled-HBM ratios + the grouped MoE block with its
+grouped-vs-dense-capacity FLOPs ratio + the plan-cache counters proving
+the DSE resolves once per unique spec+shape); the pallas-interpret CI
+job uploads it as an artifact.
 """
 
 from __future__ import annotations
@@ -255,6 +256,76 @@ def run(report) -> None:
                misses=info.misses, ok=ok)
     end_section("plan_cache")
 
+    # ------------------------------------------- grouped (MoE) section
+    # The grouped ragged expert sweep on a deterministically imbalanced
+    # routing sample (t=2048 tokens, top_k=2, E=8, capacity factor
+    # 1.25): the plan's executed FLOPs (true routed rows + straddle
+    # tiles) must undercut the padded dense-capacity einsum by at least
+    # the capacity headroom — ratio <= 1/cf + 0.05 straddle slack —
+    # plus interpret parity of the one-kernel sweep vs its XLA oracle.
+    t_tok, top_k, e_moe, cf = 2048, 2, 8, 1.25
+    from repro.models.moe import capacity as moe_capacity
+    c_moe = moe_capacity(t_tok, e_moe, top_k, cf)
+    dense_rows = e_moe * c_moe
+    counts = [2048, 1024, 512, 256, 128, 64, 32, 32]   # skewed routing
+    assert sum(counts) == t_tok * top_k
+    sizes_moe = [min(cnt, c_moe) for cnt in counts]
+    m_true = sum(sizes_moe)
+    k_g, n_g = 512, 1024
+    spec_g = ops.GemmSpec(a_dtype="bfloat16", b_dtype="bfloat16",
+                          grouped=True)
+    pl_g = ops.plan(spec_g, (m_true, k_g, n_g, e_moe, dense_rows))
+    dense_flops = 2.0 * dense_rows * k_g * n_g
+    flops_ratio = pl_g.flops / dense_flops
+    limit = 1.0 / cf + 0.05
+    report.row("gemm",
+               f"grouped modeled FLOPs E{e_moe} cf{cf} imbalanced",
+               true_rows=m_true, capacity_rows=dense_rows,
+               tile=f"{pl_g.tile.strategy} {pl_g.tile.bm}x"
+                    f"{pl_g.tile.bk}x{pl_g.tile.bn}",
+               ratio=f"{flops_ratio:.3f}", limit=f"{limit:.3f}",
+               ok=flops_ratio <= limit)
+    assert flops_ratio <= limit, (
+        f"grouped plan executes {flops_ratio:.3f} of dense-capacity "
+        f"FLOPs on the imbalanced sample; want <= {limit:.3f}")
+
+    # interpret parity: the planned grouped dispatch vs the jnp
+    # reference on a ragged sample with an empty group
+    prev_mode = os.environ.get("REPRO_KERNELS")
+    os.environ["REPRO_KERNELS"] = "interpret"
+    try:
+        gs = jnp.asarray([100, 0, 37, 60], jnp.int32)
+        ag = jax.random.normal(key, (197, 256), jnp.float32) \
+            .astype(jnp.bfloat16)
+        bg = (jax.random.normal(jax.random.PRNGKey(7), (4, 256, 256),
+                                jnp.float32) * 0.1).astype(jnp.bfloat16)
+        got = ops.gemm_grouped(ag, bg, gs)
+        want = ref.gemm_grouped_ref(ag, bg, gs, out_dtype=got.dtype)
+        err_g = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                      - want.astype(jnp.float32))))
+        report.row("gemm", "grouped pallas 197x256x256 E4 interpret",
+                   max_abs_err=f"{err_g:.3e}", ok=err_g < 1e-1)
+    finally:
+        if prev_mode is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = prev_mode
+    grouped_section = {
+        "tokens": t_tok, "top_k": top_k, "n_experts": e_moe,
+        "capacity_factor": cf, "capacity": c_moe,
+        "group_sizes": sizes_moe,
+        "true_rows": m_true, "capacity_rows": dense_rows,
+        "executed_flops": pl_g.flops, "dense_capacity_flops": dense_flops,
+        "flops_ratio": round(flops_ratio, 4),
+        "flops_ratio_limit": round(limit, 4),
+        "tile": f"{pl_g.tile.strategy} {pl_g.tile.bm}x{pl_g.tile.bk}x"
+                f"{pl_g.tile.bn}",
+        "modeled_hbm_bytes": pl_g.hbm_bytes,
+        "interpret_max_abs_err": err_g,
+        "explain": pl_g.explain(),
+    }
+    end_section("grouped")
+
     # ------------------------------------- model-vs-measured section
     # Representative decode-shaped specs, executed standalone and
     # joined with their modeled bytes/roofline time — the measurement
@@ -350,6 +421,7 @@ def run(report) -> None:
                    ok=c.n_samples >= 3)
 
     payload = {"rows": report.rows, "swiglu_fused_hbm": ratios,
+               "grouped": grouped_section,
                "autotune": autotune_section,
                "calibration": calibration_section,
                "w8a16_decode_hbm_ratio": round(hbm8 / hbm16, 4),

@@ -22,7 +22,12 @@ import dataclasses
 from typing import Optional
 
 from repro.core.hardware import TPU_V5E, TPUChip
-from repro.core.tiling import GemmProblem, TileConfig, dtype_bytes
+from repro.core.tiling import (
+    GemmProblem,
+    TileConfig,
+    dtype_bytes,
+    grouped_instances,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +124,18 @@ def hbm_traffic_bytes(tile: TileConfig, p: GemmProblem) -> float:
     writes and re-reads.  A fused epilogue bills its own operands: the
     (1, n) f32 bias vector rides with every m-row of B panels, the
     (m, n) residual is read once.
+
+    Grouped ragged GEMMs (``p.n_groups > 0``, output-stationary only):
+    A is charged at the *true* routed rows — ``p.m`` is sum(group_sizes),
+    not the dense E*capacity — with each of the worst-case
+    ``gm + E - 1`` straddling tile instances re-reading its (bm, pk)
+    A rows once per n-block column.  B is charged one (pk, pn) expert
+    panel per *instance* (an expert active over several m-tiles streams
+    its panel once per tile it owns — never the full (E, k, n) bank),
+    the per-expert (1, n) dequant-scale/bias vectors ride per instance,
+    and C is written once per unique output tile.  Inactive experts
+    (empty groups) cost nothing; the model's static worst case assumes
+    all E groups are live.
     """
     from repro.kernels.epilogue import Epilogue
     ep = Epilogue.parse(p.epilogue)
@@ -135,6 +152,15 @@ def hbm_traffic_bytes(tile: TileConfig, p: GemmProblem) -> float:
     b_scale = pn * 4 * p.n_b_operands if p.b_dtype == "int8" else 0
     bias_bytes = pn * 4 * gm if ep.bias else 0
     res_bytes = pm_ * pn * out_b if ep.residual else 0
+    if p.n_groups:
+        inst = grouped_instances(tile, p)
+        a_inst = inst * tile.bm * pk * a_b
+        a_s_inst = inst * tile.bm * 4 if p.a_dtype == "int8" else 0
+        b_inst = inst * pk * pn * b_b
+        b_s_inst = inst * pn * 4 if p.b_dtype == "int8" else 0
+        bias_inst = inst * pn * 4 if ep.bias else 0
+        return ((a_inst + a_s_inst) * gn + b_inst + b_s_inst
+                + c_bytes + bias_inst)
     if tile.strategy == "aie":
         return ((a_bytes + a_scale) * gn + (b_bytes + b_scale) * gm
                 + c_bytes + bias_bytes + res_bytes)
@@ -176,6 +202,10 @@ def estimate(tile: TileConfig, p: GemmProblem, chip: TPUChip = TPU_V5E
              ) -> TrafficEstimate:
     pm_, pk, pn = tile.padded_dims(p)
     flops = 2.0 * pm_ * pk * pn * p.n_b_operands
+    if p.n_groups:
+        # executed flops: every straddling instance recomputes its full
+        # (bm, pk, pn) block — the DSE's pressure toward small bm
+        flops = 2.0 * grouped_instances(tile, p) * tile.bm * pk * pn
     # int8 MXU rate needs *both* operands at 8 bits; W8A16 dequantizes
     # in-register and multiplies at the bf16 rate.
     int8 = dtype_bytes(p.a_dtype) == 1 and dtype_bytes(p.b_dtype) == 1

@@ -87,17 +87,19 @@ def _lane_candidates(dim: int) -> Sequence[int]:
 @functools.lru_cache(maxsize=4096)
 def _solve_cached(m: int, k: int, n: int, a_dtype: str, b_dtype: str,
                   out_dtype: str, acc_dtype: str, epilogue: str,
-                  n_b_operands: int, chip_name: str,
+                  n_b_operands: int, n_groups: int, chip_name: str,
                   budget_fraction: float, top: int, cal_version: int
                   ) -> Tuple["TileDesign", ...]:
     assert chip_name == TPU_V5E.name, "single-target build"
     chip = TPU_V5E
     p = GemmProblem(m, k, n, a_dtype, out_dtype, acc_dtype, b_dtype,
-                    epilogue, n_b_operands)
+                    epilogue, n_b_operands, n_groups)
     designs: List[TileDesign] = []
     for strategy in STRATEGIES:
         if n_b_operands > 1 and strategy == "tb":
             continue    # the gated dual-B kernel is output-stationary only
+        if n_groups and strategy == "tb":
+            continue    # the grouped sweep is output-stationary only
         # sublane minima are per-operand: bm follows A's dtype; B's
         # (bk, bn) block is billed at b_dtype inside fits_vmem, which is
         # what admits ~2x bigger bk for int8 weight streams.
@@ -131,7 +133,7 @@ def solve(p: GemmProblem, chip: TPUChip = TPU_V5E,
     pre-calibration answers."""
     return list(_solve_cached(p.m, p.k, p.n, p.a_dtype, p.b_dtype,
                               p.out_dtype, p.acc_dtype, p.epilogue,
-                              p.n_b_operands, chip.name,
+                              p.n_b_operands, p.n_groups, chip.name,
                               budget_fraction, top,
                               calibration_version()))
 
@@ -140,7 +142,7 @@ def best_tile(m: int, k: int, n: int, in_dtype: str = "bfloat16",
               out_dtype: str = "bfloat16", acc_dtype: str = "float32",
               strategy: Optional[str] = None, *,
               b_dtype: Optional[str] = None, epilogue: str = "",
-              n_b_operands: int = 1) -> TileConfig:
+              n_b_operands: int = 1, n_groups: int = 0) -> TileConfig:
     """The DSE winner (optionally restricted to one strategy) — what
     ``repro.kernels.ops.gemm`` uses when no tile is given.
 
@@ -149,10 +151,14 @@ def best_tile(m: int, k: int, n: int, in_dtype: str = "bfloat16",
     byte/element.  ``epilogue`` (an :class:`repro.kernels.epilogue
     .Epilogue` key string) bills the fused bias/residual operands, and
     ``n_b_operands=2`` searches the dual-B gated kernel's real footprint
-    (second B stream + second accumulator; 'aie' only).
+    (second B stream + second accumulator; 'aie' only).  ``n_groups=E``
+    searches the grouped ragged sweep ('aie' only): ``m`` is the true
+    routed row total and the straddle-instance billing pushes the search
+    toward small ``bm`` — exactly the expert-imbalance/tile-granularity
+    trade the megablocks formulation makes.
     """
     p = GemmProblem(m, k, n, in_dtype, out_dtype, acc_dtype, b_dtype,
-                    epilogue, n_b_operands)
+                    epilogue, n_b_operands, n_groups)
     for d in solve(p):
         if strategy is None or d.tile.strategy == strategy:
             return d.tile

@@ -77,6 +77,12 @@ def vmem_footprint(tile: TileConfig, p: GemmProblem,
     doubles the B stream, the scale blocks and the accumulator scratch;
     a fused epilogue (``p.epilogue``) adds its (1, bn) f32 bias blocks
     and/or its (bm, bn) out-dtype residual stream.
+
+    Grouped ragged GEMMs (``p.n_groups > 0``) have the ``aie`` working
+    set exactly: each instance streams one (bm, bk) A block and one
+    (bk, bn) slice of the expert bank — the per-expert scale/bias
+    vectors are the same (1, bn) blocks, and the steering tables live in
+    scalar memory, not VMEM — so no grouped-specific branch is needed.
     """
     from repro.kernels.epilogue import Epilogue
     ep = Epilogue.parse(p.epilogue)

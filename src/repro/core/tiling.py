@@ -75,6 +75,13 @@ class GemmProblem:
     * ``n_b_operands`` — 2 for the dual-B gated kernel
       (``act(A B_gate) * (A B_up)``): both B streams and both VMEM
       accumulators are billed, while A is billed once.
+
+    Grouped ragged GEMMs (the MoE expert sweep) set ``n_groups`` to the
+    expert count E: ``m`` is then the *true* total routed rows (not the
+    dense E*capacity), B is an (E, k, n) bank of which each m-tile
+    instance streams one expert's panels, and the billing models charge
+    the up-to-``gm + E - 1`` tile instances the straddling sweep
+    actually executes.  ``n_groups == 0`` is a plain dense GEMM.
     """
 
     m: int
@@ -86,11 +93,15 @@ class GemmProblem:
     b_dtype: Optional[str] = None
     epilogue: str = ""
     n_b_operands: int = 1
+    n_groups: int = 0
 
     def __post_init__(self):
         if self.b_dtype is None:
             object.__setattr__(self, "b_dtype", self.a_dtype)
         assert self.n_b_operands in (1, 2), self.n_b_operands
+        assert self.n_groups >= 0, self.n_groups
+        if self.n_groups:
+            assert self.n_b_operands == 1, "grouped GEMM is single-B"
 
     @property
     def in_dtype(self) -> str:
@@ -160,6 +171,16 @@ class TileConfig:
         """MXU-friendly: lane dims multiples of 128, sublane dim aligned."""
         return (self.bn % chip.lane == 0 and self.bk % chip.lane == 0
                 and self.bm % chip.sublanes == 0)
+
+
+def grouped_instances(tile: TileConfig, p: GemmProblem) -> int:
+    """Static worst-case m-tile instances of a grouped sweep: every
+    m-tile once, plus one revisit per group boundary that can land
+    mid-tile (``gm + E - 1``).  This is what the traffic model bills —
+    the runtime instance count (``kernels.gemm_grouped.group_metadata``)
+    is at most this."""
+    gm, _, _ = tile.grid(p)
+    return gm + max(p.n_groups - 1, 0)
 
 
 def compute_gemm_size(tile: TileConfig) -> Tuple[int, int, int]:

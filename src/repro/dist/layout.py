@@ -56,6 +56,10 @@ STRATEGIES = ("dp", "tp", "fsdp", "fsdp_tp")
 
 _PATTERNS: Tuple[Tuple[re.Pattern, Tuple[str, ...]], ...] = tuple(
     (re.compile(pat), roles) for pat, roles in (
+        # expert banks keep the expert-dim sharding under the grouped
+        # ragged GEMM path: the kernel consumes the same stacked
+        # (E, k, n) leaves, so EP placement is unchanged (quantized
+        # {"q","scale"} structs inherit it below as everywhere else)
         (r"moe/router$", ("rep", "rep")),
         (r"moe/w_(gate|up)$", ("expert", "fsdp", "tp")),
         (r"moe/w_down$", ("expert", "tp", "fsdp")),

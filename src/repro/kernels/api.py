@@ -56,11 +56,13 @@ from repro.core.bandwidth import TrafficEstimate, estimate
 from repro.core.hardware import TPU_V5E
 from repro.core.memory_model import VmemFootprint, fits_vmem, \
     vmem_efficiency, vmem_footprint
-from repro.core.tiling import STRATEGIES, GemmProblem, TileConfig, round_up
+from repro.core.tiling import STRATEGIES, GemmProblem, TileConfig, \
+    grouped_instances, round_up
 from repro.kernels import ref as _ref
 from repro.kernels.epilogue import ACTIVATIONS, Epilogue
 from repro.kernels.gemm_aie import gemm_aie
 from repro.kernels.gemm_gated import gemm_gated as _gemm_gated_kernel
+from repro.kernels.gemm_grouped import gemm_grouped as _gemm_grouped_kernel
 from repro.kernels.gemm_tb import feasible_bk, gemm_tb
 
 
@@ -109,6 +111,16 @@ class GemmSpec:
       SwiGLU core): one resident A stream, both intermediates stay in
       VMEM.  Requires an epilogue activation; bias / residual /
       out-quant terms and the 'tb' strategy are rejected.
+    * ``grouped`` — the ragged MoE family member: A is (m, k) tokens
+      sorted by expert (m = *true* routed rows), B an (E, k, n) expert
+      bank, and ``execute`` takes a ``group_sizes=`` (E,) vector.  Plans
+      arrive with extended shapes ``(m, k, n, E[, dense_rows])`` so the
+      cost model bills the straddling tile instances and ``explain()``
+      can report the padding-flops delta vs the dense E*capacity
+      formulation.  Output-stationary only ('tb' rejected), single-B
+      (``gated`` rejected), epilogue limited to per-expert bias +
+      activation, and measured autotuning is skipped (the tuner's
+      measurement harness is dense-only) — plans stay analytic.
     * ``epilogue`` — declarative bias / activation / residual /
       out-quant fused into the kernel flush (an
       :class:`~repro.kernels.epilogue.Epilogue`, or its key string).
@@ -134,6 +146,7 @@ class GemmSpec:
     b_dtype: str = "bfloat16"
     b_quant: bool = False
     gated: bool = False
+    grouped: bool = False
     epilogue: Epilogue = Epilogue()
     out_dtype: Optional[str] = None
     strategy: Optional[str] = None
@@ -173,6 +186,20 @@ class GemmSpec:
                 raise ValueError(
                     "the gated dual-B kernel is output-stationary "
                     "('aie') only; strategy/tile 'tb' is infeasible")
+        if self.grouped:
+            if self.gated:
+                raise ValueError("grouped GEMM is single-B; it cannot "
+                                 "be gated")
+            if self.epilogue.residual or self.epilogue.out_quant:
+                raise ValueError(
+                    "grouped GEMM fuses only a per-expert bias + "
+                    "activation; residual / out-quant epilogue terms "
+                    f"are unsupported (got {self.epilogue.key!r})")
+            if self.strategy == "tb" or (self.tile is not None
+                                         and self.tile.strategy == "tb"):
+                raise ValueError(
+                    "the grouped ragged kernel is output-stationary "
+                    "('aie') only; strategy/tile 'tb' is infeasible")
 
     @property
     def key(self) -> str:
@@ -183,6 +210,8 @@ class GemmSpec:
             s += "{q}"
         if self.gated:
             s += ":gated"
+        if self.grouped:
+            s += ":grouped"
         if self.epilogue.key:
             s += f":{self.epilogue.key}"
         if self.out_dtype:
@@ -231,6 +260,20 @@ def gemm_shapes(a, b) -> Tuple[int, int, int]:
     return (math.prod(a.shape[:-1]), k, n)
 
 
+def gemm_grouped_shapes(a, b, dense_rows: Optional[int] = None
+                        ) -> Tuple[int, int, int, int, int]:
+    """The planned ``(m, k, n, E, dense_rows)`` of a grouped spec: ``a``
+    is the (m, k) group-sorted token buffer (m = true routed rows), ``b``
+    the (E, k, n) expert bank.  ``dense_rows`` is what the dense
+    capacity-padded formulation would multiply (E * capacity) — it rides
+    the plan so ``explain()`` can state the padding-flops savings;
+    defaults to ``m`` (no claimed savings)."""
+    bank = b["q"] if _is_quant(b) else b
+    e, k, n = bank.shape
+    m = math.prod(a.shape[:-1])
+    return (m, k, n, e, int(dense_rows) if dense_rows else m)
+
+
 # ---------------------------------------------------------------------------
 # GemmPlan + the spec+shape-keyed plan cache
 # ---------------------------------------------------------------------------
@@ -266,6 +309,8 @@ class GemmPlan:
     vmem: VmemFootprint
     fallback_reason: Optional[str] = None
     tuned: Optional[TunedInfo] = None
+    n_groups: int = 0           # grouped family: expert-group count E
+    dense_rows: int = 0         # ... and the dense E*capacity row count
 
     @property
     def source(self) -> str:
@@ -295,6 +340,7 @@ class GemmPlan:
         mode = _mode()
         if mode in ("pallas", "interpret"):
             kern = "pallas " + ("gemm_gated" if s.gated else
+                                "gemm_grouped" if s.grouped else
                                 f"gemm_{t.strategy}")
             if mode == "interpret":
                 kern += " (interpret)"
@@ -327,6 +373,19 @@ class GemmPlan:
             f"  epilogue : {s.epilogue.key or '(none)'}"
             + (f"  gated({s.epilogue.activation})" if s.gated else ""),
         ]
+        if p.n_groups:
+            inst = grouped_instances(t, p)
+            dense_flops = 2.0 * self.dense_rows * p.k * p.n
+            saved = 1.0 - self.flops / dense_flops if dense_flops else 0.0
+            lines.insert(4, (
+                f"  grouped  : E={p.n_groups} groups, <={inst} tile "
+                f"instances  A/HBM billed at true rows "
+                f"(m={self.m} of {self.dense_rows} dense-capacity), "
+                f"B one {t.bk}x{t.bn} panel per instance"))
+            lines.insert(5, (
+                f"  padding  : {self.flops / 1e9:.2f} GFLOP executed vs "
+                f"{dense_flops / 1e9:.2f} dense-capacity "
+                f"({saved:+.0%} saved)"))
         if self.tuned is not None:
             ti = self.tuned
             t_model_us = self.traffic.t_model * 1e6
@@ -414,13 +473,29 @@ def _infeasible_reason(tile: TileConfig, p: GemmProblem) -> Optional[str]:
             "MiB budget")
 
 
-def plan(spec: GemmSpec, shapes: Tuple[int, int, int]) -> GemmPlan:
+def plan(spec: GemmSpec, shapes: Tuple[int, ...]) -> GemmPlan:
     """Resolve ``spec`` for concrete ``(m, k, n)`` — strategy + tile via
     the DSE (or a validated user override) plus the modeled costs —
-    exactly once per (spec, shape) key."""
+    exactly once per (spec, shape) key.  Grouped specs take the extended
+    shapes ``(m, k, n, E[, dense_rows])`` (:func:`gemm_grouped_shapes`)."""
     global _plan_hits, _plan_misses
-    m, k, n = (int(x) for x in shapes)
-    key = (spec, m, k, n)
+    shapes = tuple(int(x) for x in shapes)
+    if spec.grouped:
+        if len(shapes) not in (4, 5):
+            raise ValueError(
+                "a grouped spec plans with (m, k, n, E[, dense_rows]) "
+                f"shapes — got {shapes}")
+        m, k, n, e = shapes[:4]
+        dense_rows = shapes[4] if len(shapes) == 5 else m
+        if e < 1:
+            raise ValueError(f"grouped spec needs E >= 1 groups, got {e}")
+    else:
+        if len(shapes) != 3:
+            raise ValueError(
+                f"a dense spec plans with (m, k, n) shapes — got {shapes}")
+        m, k, n = shapes
+        e, dense_rows = 0, 0
+    key = (spec, m, k, n, e, dense_rows)
     cached = _plan_cache.get(key)
     if cached is not None:
         _plan_hits += 1
@@ -428,7 +503,7 @@ def plan(spec: GemmSpec, shapes: Tuple[int, int, int]) -> GemmPlan:
             _plan_event(cached, "hit")
         return cached
     _plan_misses += 1
-    resolved = _resolve(spec, m, k, n)
+    resolved = _resolve(spec, m, k, n, e, dense_rows)
     _plan_cache[key] = resolved
     if telemetry.enabled():
         _plan_event(resolved, "miss")
@@ -456,7 +531,8 @@ def _plan_event(pl: "GemmPlan", cache: str) -> None:
         fallback_reason=pl.fallback_reason)
 
 
-def _problem_for(spec: GemmSpec, m: int, k: int, n: int) -> GemmProblem:
+def _problem_for(spec: GemmSpec, m: int, k: int, n: int,
+                 n_groups: int = 0) -> GemmProblem:
     """The cost-model problem a spec resolves to at concrete shapes —
     shared by ``plan()``, :func:`solve_topk` and the autotuner."""
     ep = spec.epilogue
@@ -464,7 +540,8 @@ def _problem_for(spec: GemmSpec, m: int, k: int, n: int) -> GemmProblem:
                                    else spec.a_dtype)
     acc = "int32" if spec.a_dtype == "int8" else "float32"
     return GemmProblem(m, k, n, spec.a_dtype, out_dtype, acc,
-                       spec.b_dtype, ep.key, 2 if spec.gated else 1)
+                       spec.b_dtype, ep.key, 2 if spec.gated else 1,
+                       n_groups if spec.grouped else 0)
 
 
 def solve_topk(spec: GemmSpec, shapes: Tuple[int, int, int],
@@ -474,8 +551,9 @@ def solve_topk(spec: GemmSpec, shapes: Tuple[int, int, int],
     ``dse.solve`` (:class:`repro.core.dse.TileDesign` rows, best first,
     restricted to the spec's strategy when one is pinned; a restricted
     spec can return fewer than ``k`` rows)."""
-    m, kk, n = (int(x) for x in shapes)
-    problem = _problem_for(spec, m, kk, n)
+    m, kk, n = (int(x) for x in shapes[:3])
+    problem = _problem_for(spec, m, kk, n,
+                           int(shapes[3]) if len(shapes) > 3 else 0)
     k = max(int(k), 1)
     designs = dse.solve(problem, top=k)
     if spec.strategy is not None:
@@ -490,8 +568,9 @@ def _tune_enabled(spec: GemmSpec) -> bool:
     return _autotune.is_enabled(None)
 
 
-def _resolve(spec: GemmSpec, m: int, k: int, n: int) -> GemmPlan:
-    problem = _problem_for(spec, m, k, n)
+def _resolve(spec: GemmSpec, m: int, k: int, n: int, n_groups: int = 0,
+             dense_rows: int = 0) -> GemmPlan:
+    problem = _problem_for(spec, m, k, n, n_groups)
     fallback = None
     tuned = None
     if spec.tile is not None:
@@ -505,7 +584,9 @@ def _resolve(spec: GemmSpec, m: int, k: int, n: int) -> GemmPlan:
                 f"{tile.bn} is infeasible for {problem}: {err}")
     else:
         tile = None
-        if _tune_enabled(spec):
+        # grouped specs stay analytic: the tuner's measurement harness
+        # builds dense operands and would mis-time the ragged sweep
+        if _tune_enabled(spec) and not spec.grouped:
             # measured autotuning: the persistent tuning cache first,
             # then a top-K measured sweep; any degradation (over-budget
             # problem, stale/corrupt cache, measurement failure) falls
@@ -549,7 +630,7 @@ def _resolve(spec: GemmSpec, m: int, k: int, n: int) -> GemmPlan:
     traffic = estimate(tile, problem, TPU_V5E)
     vmem = vmem_footprint(tile, problem, TPU_V5E)
     return GemmPlan(spec, m, k, n, problem, tile, traffic, vmem,
-                    fallback, tuned)
+                    fallback, tuned, n_groups, dense_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -606,6 +687,49 @@ def _gated_pallas(a, bg, bu, tile, out_dtype, activation,
                              bg_scale=sg, bu_scale=su,
                              interpret=_interpret())
     return out[:m, :n]
+
+
+def _dispatch_grouped(pl: GemmPlan, a, b, b_scale, group_sizes, bias
+                      ) -> jax.Array:
+    """The grouped-family pallas/reference fan-out: pad to the plan's
+    tile, launch the ragged sweep (or the XLA gather oracle), slice
+    back.  ``bias`` is (E, n) per-expert; padding rows of A belong to no
+    group, padded k/n columns are zeros (scale pads with 1.0), so the
+    sliced-back result is exact."""
+    spec = pl.spec
+    act = spec.epilogue.activation
+    out_dtype = jnp.dtype(pl.problem.out_dtype)
+    sizes = group_sizes.astype(jnp.int32)
+    e = b.shape[0]
+    bias3 = bias.reshape((e, 1, bias.shape[-1])) if bias is not None \
+        else None
+    if use_pallas():
+        t = pl.tile
+        m, k = a.shape
+        _, _, n = b.shape
+        mp, kp, np_ = round_up(m, t.bm), round_up(k, t.bk), \
+            round_up(n, t.bn)
+        ap = _pad2(a, mp, kp)
+        bp = b if (kp, np_) == (k, n) else jnp.pad(
+            b, ((0, 0), (0, kp - k), (0, np_ - n)))
+        sp = None
+        if b_scale is not None:
+            sp = b_scale if np_ == n else jnp.pad(
+                b_scale, ((0, 0), (0, 0), (0, np_ - n)),
+                constant_values=1.0)
+            sp = sp.astype(jnp.float32)
+        bias_p = None
+        if bias3 is not None:
+            bias_p = bias3 if np_ == n else jnp.pad(
+                bias3, ((0, 0), (0, 0), (0, np_ - n)))
+        out = _gemm_grouped_kernel(ap, bp, sizes, tile=t,
+                                   out_dtype=out_dtype, b_scale=sp,
+                                   bias=bias_p, activation=act,
+                                   interpret=_interpret())
+        return out[:m, :n]
+    return _ref.gemm_grouped_ref(a, b, sizes, b_scale=b_scale,
+                                 bias=bias3, activation=act,
+                                 out_dtype=out_dtype)
 
 
 def _dispatch(pl: GemmPlan, a, b, b_scale, b2, b2_scale, bias, residual,
@@ -758,13 +882,118 @@ _gemm_core.defvjp(_gemm_core_fwd, _gemm_core_bwd)
 
 
 # ---------------------------------------------------------------------------
+# The grouped family's generic VJP (backward = grouped GEMMs with the
+# transposed expert bank steered by the SAME group tables)
+# ---------------------------------------------------------------------------
+
+def _group_rows(sizes: jax.Array, m: int):
+    """Per-row group id (clamped) and liveness under ``sizes`` — the
+    backward's reconstruction of the forward's steering tables."""
+    ends = jnp.cumsum(sizes.astype(jnp.int32))
+    rows = jnp.arange(m, dtype=jnp.int32)
+    gid = jnp.searchsorted(ends, rows, side="right").astype(jnp.int32)
+    live = rows < ends[-1]
+    return jnp.minimum(gid, sizes.shape[0] - 1), live
+
+
+def _grouped_plain(a, b, b_scale, sizes, out_dtype) -> jax.Array:
+    """A planned plain grouped GEMM — the recompute/backward primitive
+    (``tune=False`` like ``_plain``; dense_rows defaults to m, so
+    internal plans claim no padding savings)."""
+    spec = GemmSpec(a_dtype=a.dtype, b_dtype=b.dtype,
+                    b_quant=b_scale is not None, grouped=True,
+                    out_dtype=out_dtype, tune=False)
+    pl = plan(spec, (a.shape[0], a.shape[1], b.shape[2], b.shape[0]))
+    return _grouped_core(pl, a, b, b_scale, sizes, None)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grouped_core(pl: GemmPlan, a, b, b_scale, group_sizes, bias
+                  ) -> jax.Array:
+    """epilogue(A[r] @ B[g(r)]) over the ragged groups, forward and
+    backward driven by the plan.  ``group_sizes`` is a data operand
+    (int32 — its cotangent is float0)."""
+    return _dispatch_grouped(pl, a, b, b_scale, group_sizes, bias)
+
+
+def _grouped_core_fwd(pl, a, b, b_scale, group_sizes, bias):
+    out = _grouped_core(pl, a, b, b_scale, group_sizes, bias)
+    return out, (a, b, b_scale, group_sizes, bias)
+
+
+def _grouped_core_bwd(pl, res, g):
+    # dA rows see only their own expert's panel, so dA is itself a
+    # grouped GEMM against the transposed bank with the same group
+    # tables; dB is the per-expert segment outer product (one-hot
+    # einsum — training-path cost, never paid when serving quantized
+    # banks: int8 q gets float0 like the dense family).
+    a, b, b_scale, sizes, bias = res
+    spec = pl.spec
+    act = spec.epilogue.activation
+    e = b.shape[0]
+    gid, live = _group_rows(sizes, a.shape[0])
+    gf = jnp.where(live[:, None], g.astype(jnp.float32), 0.0)
+    if act is not None:
+        z = _grouped_plain(a, b, b_scale, sizes, jnp.float32)
+        if bias is not None:
+            z = z + bias[gid].astype(jnp.float32)
+        dz = _act_bwd(act, z, gf)
+        dz = jnp.where(live[:, None], dz, 0.0)
+    else:
+        dz = gf
+    dbias = None
+    if bias is not None:
+        dbias = jax.ops.segment_sum(dz, gid, num_segments=e
+                                    ).astype(bias.dtype)
+    if a.dtype == jnp.int8:
+        da = _float0(a)
+    else:
+        w = b if b_scale is None else \
+            (b.astype(jnp.float32) * b_scale).astype(a.dtype)
+        da = _grouped_plain(dz.astype(a.dtype), w.swapaxes(1, 2), None,
+                            sizes, a.dtype).astype(a.dtype)
+    if b_scale is not None:
+        db, dbs = _float0(b), jnp.zeros_like(b_scale)
+    elif b.dtype == jnp.int8:
+        db, dbs = _float0(b), None
+    else:
+        onehot = (jnp.where(live, gid, e)[:, None]
+                  == jnp.arange(e)[None, :]).astype(jnp.float32)
+        db = jnp.einsum("re,rk,rn->ekn", onehot,
+                        a.astype(jnp.float32), dz).astype(b.dtype)
+        dbs = None
+    return da, db, dbs, _float0(sizes), dbias
+
+
+_grouped_core.defvjp(_grouped_core_fwd, _grouped_core_bwd)
+
+
+# ---------------------------------------------------------------------------
 # execute + the one-shot gemm
 # ---------------------------------------------------------------------------
+
+def _execute_event(pl: GemmPlan) -> None:
+    if not telemetry.enabled():
+        return
+    spec = pl.spec
+    ek = (spec, pl.m, pl.k, pl.n)
+    if ek in _executed:
+        return
+    # first trace of this plan only: jitted callers re-enter execute()
+    # once per compilation, eager callers every call — the dedup keeps
+    # the event stream one record per plan
+    _executed.add(ek)
+    telemetry.event(
+        "gemm.execute", spec=spec.key, m=pl.m, k=pl.k, n=pl.n,
+        strategy=pl.tile.strategy, mode=_mode(),
+        hbm_bytes=pl.hbm_bytes, flops=pl.flops)
+    telemetry.counter("gemm.execute.first_traces").add(1)
+
 
 def execute(pl: GemmPlan, a: jax.Array, b, *, b2=None,
             bias: Optional[jax.Array] = None,
             residual: Optional[jax.Array] = None,
-            out_scale=None) -> jax.Array:
+            out_scale=None, group_sizes=None) -> jax.Array:
     """Run a resolved plan on concrete operands.
 
     ``a``: (..., k) — leading dims flatten into the planned M.  ``b`` /
@@ -772,6 +1001,13 @@ def execute(pl: GemmPlan, a: jax.Array, b, *, b2=None,
     says ``b_quant``.  Epilogue operands must match the spec (a plan for
     a bias epilogue requires ``bias=``, and vice versa) — mismatches
     raise rather than silently computing something else.
+
+    A grouped plan requires ``group_sizes=`` (an (E,) integer vector)
+    and takes ``b`` as the (E, k, n) expert bank (quantized: q (E, k, n)
+    with scale (E, 1, n)); ``bias`` is then per-expert (E, n).  Rows of
+    ``a`` must be group-sorted; rows at and beyond ``sum(group_sizes)``
+    come back zero.  The W8A8 activation-quant re-route below is dense
+    family only — a quantized grouped bank always runs W8A16.
 
     Under ``quant.activation_mode() == "w8a8"`` a quantized-weight,
     linear-epilogue plan re-routes through dynamic per-row int8
@@ -784,6 +1020,10 @@ def execute(pl: GemmPlan, a: jax.Array, b, *, b2=None,
     if spec.gated != (b2 is not None):
         raise ValueError(f"plan {'expects' if spec.gated else 'forbids'} "
                          "a second gated B operand `b2`")
+    if spec.grouped != (group_sizes is not None):
+        raise ValueError(
+            f"plan {'requires' if spec.grouped else 'forbids'} "
+            "`group_sizes=`")
     for name, want, got in (("bias", ep.bias, bias is not None),
                             ("residual", ep.residual,
                              residual is not None),
@@ -804,6 +1044,42 @@ def execute(pl: GemmPlan, a: jax.Array, b, *, b2=None,
             b2, b2_scale = b2["q"], b2["scale"]
     lead = a.shape[:-1]
     a2 = a.reshape((-1, a.shape[-1]))
+    if spec.grouped:
+        e = pl.n_groups
+        if b.ndim != 3 or b.shape != (e, pl.k, pl.n):
+            raise ValueError(
+                f"grouped plan expects the ({e}, {pl.k}, {pl.n}) expert "
+                f"bank, got B {b.shape}")
+        if b_scale is not None and b_scale.shape != (e, 1, pl.n):
+            raise ValueError(
+                f"grouped quant scale must be ({e}, 1, {pl.n}), got "
+                f"{b_scale.shape}")
+        if a2.shape != (pl.m, pl.k):
+            raise ValueError(
+                f"operands {a.shape} @ {b.shape} do not match the "
+                f"plan's {pl.m}x{pl.k}x{pl.n}")
+        gs = jnp.asarray(group_sizes)
+        if gs.shape != (e,) or not jnp.issubdtype(gs.dtype, jnp.integer):
+            raise ValueError(
+                f"group_sizes must be an ({e},) integer vector, got "
+                f"{gs.shape} {gs.dtype}")
+        if _dtname(a2.dtype) != spec.a_dtype \
+                or _dtname(b.dtype) != spec.b_dtype:
+            raise ValueError(
+                f"operand dtypes ({_dtname(a2.dtype)}, {_dtname(b.dtype)})"
+                f" do not match the spec ({spec.a_dtype}, {spec.b_dtype})")
+        bias_g = None
+        if bias is not None:
+            bias_g = bias.reshape((e, -1))
+            if bias_g.shape != (e, pl.n):
+                raise ValueError(
+                    f"grouped bias must be per-expert ({e}, {pl.n}), "
+                    f"got {bias.shape}")
+        _execute_event(pl)
+        out = _grouped_core(pl, a2, b, b_scale, gs.astype(jnp.int32),
+                            bias_g)
+        return out.reshape(lead + (pl.n,)).astype(
+            jnp.dtype(pl.problem.out_dtype))
     if a2.shape != (pl.m, pl.k) or b.shape != (pl.k, pl.n):
         raise ValueError(
             f"operands {a.shape} @ {b.shape} do not match the plan's "
@@ -817,18 +1093,7 @@ def execute(pl: GemmPlan, a: jax.Array, b, *, b2=None,
         raise ValueError(
             f"operand dtypes ({_dtname(a2.dtype)}, {_dtname(b.dtype)}) "
             f"do not match the spec ({spec.a_dtype}, {spec.b_dtype})")
-    if telemetry.enabled():
-        ek = (spec, pl.m, pl.k, pl.n)
-        if ek not in _executed:
-            # first trace of this plan only: jitted callers re-enter
-            # execute() once per compilation, eager callers every call —
-            # the dedup keeps the event stream one record per plan
-            _executed.add(ek)
-            telemetry.event(
-                "gemm.execute", spec=spec.key, m=pl.m, k=pl.k, n=pl.n,
-                strategy=pl.tile.strategy, mode=_mode(),
-                hbm_bytes=pl.hbm_bytes, flops=pl.flops)
-            telemetry.counter("gemm.execute.first_traces").add(1)
+    _execute_event(pl)
     n = pl.n
     out_dtype = jnp.dtype(pl.problem.out_dtype)
     bias2 = bias.reshape((1, n)) if bias is not None else None
@@ -898,3 +1163,32 @@ def gemm(a: jax.Array, b, *, b2=None, bias: Optional[jax.Array] = None,
     pl = plan(spec, gemm_shapes(a, b))
     return execute(pl, a, b, b2=b2, bias=bias, residual=residual,
                    out_scale=out_scale)
+
+
+def gemm_grouped(a: jax.Array, b, group_sizes: jax.Array, *,
+                 bias: Optional[jax.Array] = None,
+                 activation: Optional[str] = None,
+                 tile: Optional[TileConfig] = None, out_dtype=None,
+                 dense_rows: Optional[int] = None) -> jax.Array:
+    """The one-shot planned grouped ragged GEMM (the MoE expert sweep):
+    ``C[r] = epilogue(A[r] @ B[g(r)])`` with ``g(r)`` the expert owning
+    row ``r`` under ``group_sizes``.
+
+    ``a``: (..., k) tokens *sorted by expert* (leading dims flatten into
+    the true routed row count m); ``b``: (E, k, n) expert bank, or a
+    ``{"q", "scale"}`` W8A16 struct with scale (E, 1, n); ``bias``:
+    per-expert (E, n).  Rows at and beyond ``sum(group_sizes)`` come
+    back zero.  ``dense_rows`` (the E*capacity rows the dense einsum
+    would multiply) feeds ``plan.explain()``'s padding-flops line.
+    """
+    bq = _is_quant(b)
+    bank = b["q"] if bq else b
+    spec = GemmSpec(
+        a_dtype=_dtname(a.dtype),
+        b_dtype="int8" if bq else _dtname(bank.dtype),
+        b_quant=bq, grouped=True,
+        epilogue=Epilogue.from_args(bias, activation, None, None),
+        out_dtype=None if out_dtype is None else _dtname(out_dtype),
+        tile=tile)
+    pl = plan(spec, gemm_grouped_shapes(a, b, dense_rows))
+    return execute(pl, a, b, bias=bias, group_sizes=group_sizes)

@@ -127,6 +127,48 @@ def gemm_gated_ref(a: jax.Array, b_gate: jax.Array, b_up: jax.Array, *,
     return out.astype(out_dtype)
 
 
+def gemm_grouped_ref(a: jax.Array, b: jax.Array, group_sizes: jax.Array,
+                     *, b_scale: Optional[jax.Array] = None,
+                     bias: Optional[jax.Array] = None,
+                     activation: Optional[str] = None,
+                     out_dtype=None) -> jax.Array:
+    """Oracle (and CPU dispatch path) for the grouped ragged GEMM:
+    ``C[r] = epilogue(A[r] @ B[g(r)])`` with ``g(r)`` the group owning
+    row ``r`` of the group-sorted ``a`` under ``group_sizes``.
+
+    One full (m, k) x (k, n) dot per group with the foreign rows
+    select-masked out — O(E) sequential dots, O(m*n) live memory, no
+    (E, capacity, d) padding buffer.  Rows at and beyond
+    ``sum(group_sizes)`` come back zero.  ``b_scale`` / ``bias``:
+    per-expert (E, 1, n).  Same accumulation semantics as the kernels
+    (fp32 MXU accumulation, W8A16 in-register widening) but at full-k
+    dot granularity — allclose to the tiled kernel, bitwise only when
+    the tile covers the problem (``gemm_grouped_blocked_ref`` replays
+    the exact tile order for the bitwise sweeps).
+    """
+    from repro.kernels.epilogue import apply_epilogue
+    m, _ = a.shape
+    e, _, n = b.shape
+    sizes = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(sizes)
+    rows = jnp.arange(m, dtype=jnp.int32)
+    gid = jnp.minimum(jnp.searchsorted(ends, rows, side="right"),
+                      e - 1).astype(jnp.int32)
+    live = rows < ends[-1]
+
+    def group(g, acc):
+        z = _acc_f32(a, b[g])
+        if b_scale is not None:
+            z = z * b_scale[g].astype(jnp.float32)
+        return jnp.where((gid == g)[:, None], z, acc)
+
+    z = jax.lax.fori_loop(0, e, group, jnp.zeros((m, n), jnp.float32))
+    z = apply_epilogue(z, activation=activation,
+                       bias=bias[gid, 0] if bias is not None else None)
+    z = jnp.where(live[:, None], z, 0.0)
+    return z.astype(out_dtype or jnp.float32)
+
+
 def gemm_int8_ref(a_q: jax.Array, b_q: jax.Array,
                   a_scale: jax.Array, b_scale: jax.Array,
                   out_dtype=jnp.float32) -> jax.Array:

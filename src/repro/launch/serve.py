@@ -292,6 +292,13 @@ def main() -> None:
         print(f"[serve] telemetry: {snap['n_events']} events, "
               f"plan cache {snap['plan_cache']}; wrote "
               f"{paths[0]} and {paths[1]}")
+        routed = snap["counters"].get("moe.group_sizes")
+        if routed is not None:
+            dropped = snap["counters"].get("moe.dropped_tokens", 0)
+            total = routed + dropped
+            print(f"[serve] moe: {int(routed)} rows through grouped "
+                  f"expert GEMMs, {int(dropped)} capacity-dropped "
+                  f"({dropped / max(total, 1):.1%} of assignments)")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,10 @@ builds the spec and goes through the same plan cache):
 
     y = ops.gemm(x, w, residual=r)
 
+The grouped ragged family member (the MoE expert sweep) is
+``ops.gemm_grouped(xs, bank, group_sizes)`` — same spec/plan/execute
+pipeline with the extended ``gemm_grouped_shapes`` plan key.
+
 Attention and the quantization helpers ride along so model code needs a
 single ``from repro import ops``.  The pre-redesign entrypoints
 (``gemm_fused``/``gemm_gated``/``gemm_int8`` and the old ``gemm``) live
@@ -26,6 +30,8 @@ from repro.kernels.api import (  # noqa: F401
     TunedInfo,
     execute,
     gemm,
+    gemm_grouped,
+    gemm_grouped_shapes,
     gemm_shapes,
     plan,
     plan_cache_clear,

@@ -22,9 +22,12 @@ Two serving modes:
   scale is applied outside.  Decode-oriented: the w8a8 path is
   forward-only (no gradient through the activation quantizer).
 
-Only leaves that flow through ``ops.gemm`` are rewritten (attention and
-MLP projections, SSM/RG-LRU projections, lm_head); embeddings (gather),
-MoE expert banks (batched einsum) and norms keep their dtype.
+Only leaves that flow through ``ops.gemm``/``ops.gemm_grouped`` are
+rewritten (attention and MLP projections, SSM/RG-LRU projections,
+lm_head, and the stacked MoE expert banks — the grouped ragged kernel
+dequantizes each (bk, bn) expert panel in-register with its per-expert
+(1, n) scale row); embeddings (gather), the MoE router, and norms keep
+their dtype.
 """
 
 from __future__ import annotations
@@ -36,9 +39,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-# leaves consumed via ops.gemm(x, w) with w: (k, n)
+# leaves consumed via ops.gemm(x, w) with w: (k, n), plus the stacked
+# (E, k, n) MoE expert banks consumed via ops.gemm_grouped (their
+# per-output-channel scales quantize to (E, 1, n) — exactly the
+# per-expert scale rows the grouped kernel's epilogue streams)
 QUANT_PATHS = re.compile(
     r"(attn|cross)/w[qkvo]$|mlp/w_(gate|up|down|in|out)$"
+    r"|moe/w_(gate|up|down)$"
     r"|(mixer|rec)/(in|out)_proj$|rec/w_[ri]$|lm_head$")
 
 

@@ -1,0 +1,331 @@
+"""Grouped ragged GEMM: kernel-vs-oracle bitwise parity, the planned
+``ops.gemm_grouped`` dispatch (ref / interpret x plain / W8A16 /
+epilogue), the grouped VJP, per-group plan billing, and the MoE layer
+riding it (pjit + quantized banks + telemetry counters).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ops, quant, telemetry
+from repro.kernels import api
+from repro.kernels.gemm_grouped import (
+    gemm_grouped_blocked_ref,
+    group_metadata,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_plan_cache():
+    api.plan_cache_clear()
+    yield
+    api.plan_cache_clear()
+
+
+def _rand(shape, dtype=jnp.bfloat16, seed=0, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+    return (x * scale).astype(dtype)
+
+
+SIZES = np.array([100, 0, 37, 60], np.int32)       # ragged + empty group
+E, K, N = 4, 256, 256
+M = int(SIZES.sum())
+A = _rand((M, K), seed=0)
+B = _rand((E, K, N), seed=1, scale=0.1)
+GS = jnp.asarray(SIZES)
+BQ = quant.quantize_weight(np.asarray(
+    jax.random.normal(jax.random.PRNGKey(2), (E, K, N), jnp.float32)))
+BIAS = _rand((E, N), jnp.float32, seed=3)
+
+
+def _numpy_oracle(a, b, sizes, bias=None, activation=None):
+    gid = np.repeat(np.arange(len(sizes)), np.asarray(sizes))
+    an = np.asarray(a, np.float32)
+    bn = np.asarray(b, np.float32)
+    out = np.zeros((an.shape[0], bn.shape[-1]), np.float32)
+    for g in range(bn.shape[0]):
+        sel = gid == g
+        z = an[sel] @ bn[g]
+        if bias is not None:
+            z = z + np.asarray(bias, np.float32)[g]
+        if activation == "silu":
+            z = z / (1.0 + np.exp(-np.clip(z, -60, 60)))
+        out[sel] = z
+    return out
+
+
+# ---------------------------------------------------------------------------
+# group metadata
+# ---------------------------------------------------------------------------
+
+def test_group_metadata_instances_and_tables():
+    (offs, gids, tids), n_inst = group_metadata(GS, 256, 64)
+    offs, gids, tids = map(np.asarray, (offs, gids, tids))
+    assert list(offs) == [0, 100, 100, 137, 197]
+    n = int(n_inst)
+    # every live (group, m-tile) pair appears exactly once, in order
+    pairs = list(zip(gids[:n], tids[:n]))
+    assert pairs == sorted(set(pairs), key=lambda p: (p[1], p[0]))
+    for g, t in pairs:
+        lo, hi = offs[g], offs[g + 1]
+        assert lo < hi, "empty group emitted an instance"
+        assert lo < (t + 1) * 64 and hi > t * 64, "instance off its rows"
+    # static table length is tiles_m + E - 1 regardless of raggedness
+    assert gids.shape == tids.shape == (256 // 64 + len(SIZES) - 1,)
+
+
+def test_group_metadata_all_empty():
+    (offs, _, _), n_inst = group_metadata(
+        jnp.zeros((4,), jnp.int32), 128, 64)
+    assert int(n_inst) == 0 and int(np.asarray(offs)[-1]) == 0
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode kernel == blocked XLA oracle, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes", [SIZES, [0, 0, 197, 0], [64, 64, 64, 5]])
+def test_kernel_bitwise_vs_blocked_ref(monkeypatch, sizes):
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    gs = jnp.asarray(np.asarray(sizes, np.int32))
+    y = ops.gemm_grouped(A, B, gs)
+    spec = ops.GemmSpec(a_dtype="bfloat16", b_dtype="bfloat16",
+                        grouped=True)
+    pl = ops.plan(spec, ops.gemm_grouped_shapes(A, B))
+    t = pl.tile
+    pad = lambda d, bd: (-(-d // bd)) * bd - d
+    ap = jnp.pad(A, ((0, pad(M, t.bm)), (0, pad(K, t.bk))))
+    bp = jnp.pad(B, ((0, 0), (0, pad(K, t.bk)), (0, pad(N, t.bn))))
+    ref = gemm_grouped_blocked_ref(ap, bp, gs, tile=t,
+                                   out_dtype=y.dtype)[:M, :N]
+    assert jnp.all(y == ref), "interpret kernel diverged from oracle"
+
+
+def test_kernel_bitwise_vs_blocked_ref_fused(monkeypatch):
+    """The fused W8A16 + bias + silu flush must also match bitwise."""
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    y = ops.gemm_grouped(A, BQ, GS, bias=BIAS, activation="silu")
+    spec = ops.GemmSpec(a_dtype="bfloat16", b_dtype="int8", b_quant=True,
+                        grouped=True,
+                        epilogue=ops.Epilogue(bias=True, activation="silu"))
+    pl = ops.plan(spec, ops.gemm_grouped_shapes(A, BQ))
+    t = pl.tile
+    pad = lambda d, bd: (-(-d // bd)) * bd - d
+    ap = jnp.pad(A, ((0, pad(M, t.bm)), (0, pad(K, t.bk))))
+    qp = jnp.pad(BQ["q"], ((0, 0), (0, pad(K, t.bk)), (0, pad(N, t.bn))))
+    sp = jnp.pad(BQ["scale"], ((0, 0), (0, 0), (0, pad(N, t.bn))),
+                 constant_values=1.0)
+    bp = jnp.pad(BIAS.reshape(E, 1, N),
+                 ((0, 0), (0, 0), (0, pad(N, t.bn))))
+    ref = gemm_grouped_blocked_ref(ap, qp, GS, tile=t, b_scale=sp,
+                                   bias=bp, activation="silu",
+                                   out_dtype=y.dtype)[:M, :N]
+    assert jnp.all(y == ref)
+
+
+# ---------------------------------------------------------------------------
+# dispatch numerics (both modes) vs the per-group numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_dispatch_matches_numpy(monkeypatch, mode):
+    monkeypatch.setenv("REPRO_KERNELS", mode)
+    y = np.asarray(ops.gemm_grouped(A, B, GS), np.float32)
+    want = _numpy_oracle(A, B, SIZES)
+    np.testing.assert_allclose(y, want, atol=0.05, rtol=0.05)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret"])
+def test_dispatch_quant_epilogue_matches_numpy(monkeypatch, mode):
+    monkeypatch.setenv("REPRO_KERNELS", mode)
+    y = np.asarray(ops.gemm_grouped(A, BQ, GS, bias=BIAS,
+                                    activation="silu"), np.float32)
+    want = _numpy_oracle(
+        A, np.asarray(BQ["q"], np.float32) * np.asarray(BQ["scale"]),
+        SIZES, bias=BIAS, activation="silu")
+    tol = 0.05 * (np.abs(want).max() + 1)
+    assert np.max(np.abs(y - want)) < tol
+
+
+def test_empty_groups_give_zeros():
+    y = ops.gemm_grouped(A, B, jnp.zeros((E,), jnp.int32))
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32)))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# grouped VJP — grad parity with the dense masked composition
+# ---------------------------------------------------------------------------
+
+def test_vjp_matches_dense_composition():
+    af = _rand((M, K), jnp.float32, seed=5)
+    bf = _rand((E, K, N), jnp.float32, seed=6, scale=0.1)
+    biasf = _rand((E, N), jnp.float32, seed=7)
+    gid = jnp.asarray(np.repeat(np.arange(E), SIZES))
+
+    def f_grouped(a, b, bias):
+        y = ops.gemm_grouped(a, b, GS, bias=bias, activation="gelu",
+                             out_dtype=jnp.float32)
+        return jnp.sum(y ** 2)
+
+    def f_dense(a, b, bias):
+        z = jnp.einsum("rk,rkn->rn", a, b[gid]) + bias[gid]
+        return jnp.sum(jax.nn.gelu(z, approximate=True) ** 2)
+
+    got = jax.grad(f_grouped, argnums=(0, 1, 2))(af, bf, biasf)
+    want = jax.grad(f_dense, argnums=(0, 1, 2))(af, bf, biasf)
+    for name, g, w in zip("a b bias".split(), got, want):
+        rel = float(jnp.max(jnp.abs(g - w))
+                    / (jnp.max(jnp.abs(w)) + 1e-6))
+        assert rel < 2e-4, (name, rel)
+
+
+def test_vjp_quant_grads_activations_only():
+    """W8A16 backward: dA flows (through dequantized panels), the int8
+    bank gets no cotangent."""
+    af = _rand((M, K), jnp.float32, seed=8)
+    g = jax.grad(lambda a: jnp.sum(ops.gemm_grouped(a, BQ, GS) ** 2))(af)
+    assert g.shape == af.shape and bool(jnp.all(jnp.isfinite(g)))
+
+
+# ---------------------------------------------------------------------------
+# spec/plan: validation, per-group billing, padding-FLOPs saving
+# ---------------------------------------------------------------------------
+
+def test_grouped_spec_rejects_gated_and_tb():
+    with pytest.raises(ValueError, match="gated"):
+        ops.GemmSpec(grouped=True, gated=True,
+                     epilogue=ops.Epilogue(activation="silu"))
+    with pytest.raises(ValueError, match="grouped"):
+        ops.GemmSpec(grouped=True, strategy="tb")
+    with pytest.raises(ValueError, match="grouped"):
+        ops.GemmSpec(grouped=True, epilogue=ops.Epilogue(residual=True))
+
+
+def test_execute_validates_group_sizes():
+    spec = ops.GemmSpec(a_dtype="bfloat16", b_dtype="bfloat16",
+                        grouped=True)
+    pl = ops.plan(spec, ops.gemm_grouped_shapes(A, B))
+    with pytest.raises(ValueError, match="group_sizes"):
+        ops.execute(pl, A, B)                   # grouped without sizes
+    dense = ops.plan(ops.GemmSpec(), ops.gemm_shapes(A, B[0]))
+    with pytest.raises(ValueError, match="group_sizes"):
+        ops.execute(dense, A, B[0], group_sizes=GS)
+
+
+def test_explain_reports_group_billing_and_padding(monkeypatch):
+    spec = ops.GemmSpec(a_dtype="bfloat16", b_dtype="bfloat16",
+                        grouped=True)
+    # an imbalanced MoE shape: 2304 routed rows vs 5120 dense capacity
+    pl = ops.plan(spec, (2304, 512, 1024, 8, 5120))
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    txt = pl.explain()
+    assert "gemm_grouped" in txt
+    assert "E=8 groups" in txt and "2304 of 5120 dense-capacity" in txt
+    assert "padding" in txt and "saved" in txt
+    # executed FLOPs sit between true-rows and dense-capacity work
+    true_f = 2.0 * 2304 * 512 * 1024
+    dense_f = 2.0 * 5120 * 512 * 1024
+    assert true_f <= pl.flops < dense_f
+
+
+def test_grouped_billed_at_true_rows_not_capacity():
+    """A/HBM billing follows the true routed rows: the same grouped
+    problem at the E*C dense-capacity row count must model strictly
+    more traffic and more executed FLOPs."""
+    spec = ops.GemmSpec(a_dtype="bfloat16", b_dtype="bfloat16",
+                        grouped=True)
+    pl = ops.plan(spec, (2304, 512, 1024, 8, 5120))
+    cap = ops.plan(spec, (5120, 512, 1024, 8, 5120))
+    assert pl.hbm_bytes < cap.hbm_bytes
+    assert pl.flops < cap.flops
+
+
+def test_plan_cache_keys_on_group_count():
+    spec = ops.GemmSpec(a_dtype="bfloat16", b_dtype="bfloat16",
+                        grouped=True)
+    p1 = ops.plan(spec, (256, 256, 256, 4))
+    p2 = ops.plan(spec, (256, 256, 256, 8))
+    p3 = ops.plan(spec, (256, 256, 256, 4))
+    assert p1 is p3 and p1 is not p2
+
+
+# ---------------------------------------------------------------------------
+# the MoE layer on top (pjit path; EP lives in test_moe_ep.py)
+# ---------------------------------------------------------------------------
+
+def _moe_setup(dtype=jnp.float32, seed=0):
+    import repro.models.moe as MOE
+    key = jax.random.PRNGKey(seed)
+    p = MOE.init_moe(key, 32, 64, 8, dtype)
+    x = jax.random.normal(key, (2, 16, 32), dtype)
+    return MOE, p, x
+
+
+def test_moe_grouped_matches_dense_ref():
+    MOE, p, x = _moe_setup()
+    y, aux = MOE._moe_ffn_pjit(p, x, top_k=2, capacity_factor=16.0)
+    want = MOE.moe_ffn_dense_ref(p, x, top_k=2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_grouped_matches_dense_fallback(monkeypatch):
+    """REPRO_MOE_GROUPED=0 (padded einsum) and the grouped path are the
+    same layer at fp tolerance — drops included (tight capacity)."""
+    MOE, p, x = _moe_setup(seed=3)
+    y1, _ = jax.jit(lambda p, x: MOE._moe_ffn_pjit(
+        p, x, top_k=2, capacity_factor=1.0))(p, x)
+    monkeypatch.setenv("REPRO_MOE_GROUPED", "0")
+    y0, _ = jax.jit(lambda p, x: MOE._moe_ffn_pjit(
+        p, x, top_k=2, capacity_factor=1.0))(p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_quantized_banks_through_grouped():
+    MOE, p, x = _moe_setup(seed=1)
+    qp = dict(p)
+    for name in ("w_gate", "w_up", "w_down"):
+        qp[name] = quant.quantize_weight(p[name])
+    y, _ = MOE._moe_ffn_pjit(qp, x, top_k=2, capacity_factor=16.0)
+    want = MOE.moe_ffn_dense_ref(qp, x, top_k=2)   # dequantizes up front
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_grad_through_grouped():
+    MOE, p, x = _moe_setup(seed=2)
+    g1 = jax.grad(lambda p: jnp.sum(MOE._moe_ffn_pjit(
+        p, x, top_k=2, capacity_factor=16.0)[0] ** 2))(p)
+    g2 = jax.grad(lambda p: jnp.sum(
+        MOE.moe_ffn_dense_ref(p, x, top_k=2) ** 2))(p)
+    for k in g1:
+        err = float(jnp.max(jnp.abs(g1[k] - g2[k])))
+        assert err < 1e-4, (k, err)
+
+
+def test_moe_telemetry_counters():
+    MOE, p, x = _moe_setup(seed=4)
+    telemetry.enable()
+    try:
+        jax.block_until_ready(
+            MOE._moe_ffn_pjit(p, x, top_k=2, capacity_factor=0.6)[0])
+        jax.effects_barrier()
+        snap = telemetry.snapshot()
+    finally:
+        telemetry.disable()
+    routed = snap["counters"]["moe.group_sizes"]
+    dropped = snap["counters"]["moe.dropped_tokens"]
+    assert routed + dropped == 2 * 16 * 2       # every assignment counted
+    assert routed > 0
+
+
+def test_quant_paths_cover_expert_banks():
+    assert quant.QUANT_PATHS.search("layers/u0/moe/w_gate")
+    assert quant.QUANT_PATHS.search("layers/u0/moe/w_down")
+    assert not quant.QUANT_PATHS.search("layers/u0/moe/router")

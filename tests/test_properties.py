@@ -189,6 +189,59 @@ def test_moe_sort_dispatch_matches_dense(t, e, k, seed):
     assert 0.0 < float(aux) < 10.0 * k
 
 
+@given(t=st.integers(1, 48), e=st.sampled_from([2, 4, 8]),
+       k=st.sampled_from([1, 2]), c=st.integers(1, 16),
+       seed=st.integers(0, 999))
+@settings(**SET)
+def test_moe_sort_dispatch_invariants(t, e, k, c, seed):
+    """The ragged sort-dispatch under arbitrary routing and capacity:
+    tokens are conserved into unique ragged rows, drops are exactly the
+    over-capacity tail of each expert, and the stable sort preserves
+    source order within every expert."""
+    import repro.models.moe as M
+    if k > e:
+        return
+    rng = np.random.default_rng(seed)
+    d = 8
+    xe = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    # top-k routing: k distinct experts per token
+    top_ids = jnp.asarray(np.stack(
+        [rng.choice(e, size=k, replace=False) for _ in range(t)]),
+        jnp.int32)
+    dsp = M._sort_dispatch(xe, top_ids, k, e, c)
+    sizes = np.asarray(dsp.sizes)
+    counts = np.asarray(dsp.counts)
+    dest, in_cap = np.asarray(dsp.dest), np.asarray(dsp.in_cap)
+    tok, se = np.asarray(dsp.token_idx), np.asarray(dsp.sorted_e)
+    xs = np.asarray(dsp.xs)
+
+    # capacity semantics: kept rows are min(count, c), never more
+    np.testing.assert_array_equal(sizes, np.minimum(counts, c))
+    assert counts.sum() == t * k
+
+    # no double-write: kept destinations are unique and exactly cover
+    # the ragged row range [0, sum(sizes))
+    kept = np.sort(dest[in_cap])
+    np.testing.assert_array_equal(kept, np.arange(sizes.sum()))
+    assert np.all(dest[~in_cap] == t * k)
+
+    # token conservation: each kept assignment's packed row is its
+    # source token, bit-for-bit; rows past the ragged total are zero
+    np.testing.assert_array_equal(xs[dest[in_cap]],
+                                  np.asarray(xe)[tok[in_cap]])
+    assert not np.any(xs[sizes.sum():])
+
+    # drops are exactly the over-capacity tail (stable order): within
+    # every expert the first min(count, c) assignments are kept
+    slot = np.asarray(dsp.slot)
+    np.testing.assert_array_equal(in_cap, slot < c)
+    for g in range(e):
+        sel = se == g
+        assert in_cap[sel].sum() == sizes[g]
+        # permutation stability: source order preserved within a group
+        assert np.all(np.diff(tok[sel]) > 0)
+
+
 @given(t=st.integers(4, 32), seed=st.integers(0, 999))
 @settings(**SET)
 def test_moe_capacity_drops_zero_or_keep(t, seed):
