@@ -10,8 +10,9 @@ no TPU).
 Also writes ``BENCH_gemm.json`` (rows + the fused-vs-unfused SwiGLU
 modeled-HBM ratios + the grouped MoE block with its
 grouped-vs-dense-capacity FLOPs ratio + the plan-cache counters proving
-the DSE resolves once per unique spec+shape); the pallas-interpret CI
-job uploads it as an artifact.
+the DSE resolves once per unique spec+shape + modeled-vs-measured rows
+for the planned attention path); the pallas-interpret CI job uploads it
+as an artifact.
 """
 
 from __future__ import annotations
@@ -420,7 +421,108 @@ def run(report) -> None:
                    t0_us=f"{c.t0_us:.1f}", r2=f"{c.r2:.4f}",
                    ok=c.n_samples >= 3)
 
+    # ------------------------------------------------ attention section
+    # Same treatment for the AttnSpec -> attn_plan -> attn_execute path:
+    # representative prefill/decode/paged specs planned through the
+    # attention DSE and executed standalone, the measured median joined
+    # with the plan's modeled bytes/roofline time.  Ref dispatch pinned
+    # for the timing rows (the GEMM model-vs-measured honesty note
+    # applies), plus one interpret-parity row proving the planned
+    # flash-decode body agrees with its XLA oracle through the same
+    # plan/execute entrypoints the serve loop uses.
+    from repro.tune import measure_attn_plan
+    ops.attn_plan_cache_clear()
+    attn_cases = [
+        ("prefill mha causal b1s512 d64",
+         ops.AttnSpec(mode="prefill"), (1, 512, 512, 8, 8, 64)),
+        ("prefill gqa4 win256 b1s512 d64",
+         ops.AttnSpec(mode="prefill", window=256, group=4),
+         (1, 512, 512, 8, 2, 64)),
+        ("decode gqa4 b4 skv2048 d64",
+         ops.AttnSpec(mode="decode", group=4), (4, 2048, 8, 2, 64)),
+        ("decode_paged gqa4 b2 32x64p d64",
+         ops.AttnSpec(mode="decode_paged", group=4),
+         (2, 32, 64, 8, 2, 64)),
+    ]
+    attn_rows = []
+    prev_mode = os.environ.get("REPRO_KERNELS")
+    os.environ["REPRO_KERNELS"] = "ref"
+    try:
+        rng = np.random.default_rng(0)
+        for label, spec_a, shapes_a in attn_cases:
+            pl_a = ops.attn_plan(spec_a, shapes_a)
+            meas = measure_attn_plan(pl_a, iters=3, warmup=1, rng=rng)
+            t_us = meas.median_s * 1e6
+            t_model_us = pl_a.traffic.t_model * 1e6
+            attn_rows.append({
+                "spec": pl_a.spec.key, "shape": pl_a.shape_key,
+                "kernel": pl_a.kernel,
+                "blocks": (f"{pl_a.bq or '-'}x{pl_a.bkv or '-'}"
+                           if pl_a.bq or pl_a.bkv else None),
+                "source": pl_a.source,
+                "hbm_mib": round(pl_a.hbm_bytes / 2**20, 3),
+                "flops": pl_a.flops,
+                "bound": pl_a.traffic.bound,
+                "t_model_us": round(t_model_us, 2),
+                "t_measured_us": round(t_us, 2),
+                "spread": round(meas.spread, 4),
+                "mode": "ref",
+                "fallback_reason": pl_a.fallback_reason,
+            })
+            report.row("gemm", f"attn model-vs-measured {label}",
+                       kernel=pl_a.kernel,
+                       modeled_us=f"{t_model_us:.1f}",
+                       measured_us=f"{t_us:.0f}",
+                       hbm_mib=f"{pl_a.hbm_bytes/2**20:.1f}",
+                       ok=t_us > 0)
+    finally:
+        if prev_mode is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = prev_mode
+    attn_cache = ops.attn_plan_cache_info()
+    ok = (attn_cache.entries == len(attn_cases)
+          and attn_cache.misses == len(attn_cases))
+    report.row("gemm", "attn plan cache (one resolve per spec+shape)",
+               entries=attn_cache.entries, hits=attn_cache.hits,
+               misses=attn_cache.misses, ok=ok)
+
+    # interpret parity: the planned flash-decode kernel body vs the XLA
+    # decode oracle, ragged per-row positions included
+    prev_mode = os.environ.get("REPRO_KERNELS")
+    os.environ["REPRO_KERNELS"] = "interpret"
+    try:
+        from repro.kernels.attn_api import _decode_attention_xla
+        qd = jax.random.normal(key, (2, 8, 64), jnp.float32) \
+            .astype(jnp.bfloat16)
+        kc = jax.random.normal(jax.random.PRNGKey(11), (2, 512, 4, 64),
+                               jnp.float32).astype(jnp.bfloat16)
+        vc = jax.random.normal(jax.random.PRNGKey(12), (2, 512, 4, 64),
+                               jnp.float32).astype(jnp.bfloat16)
+        pos = jnp.asarray([200, 511], jnp.int32)
+        pl_fd = ops.attn_plan(ops.AttnSpec(mode="decode", group=2),
+                              (2, 512, 8, 4, 64))
+        got = ops.attn_execute(pl_fd, qd, kc, vc, pos=pos)
+        want = _decode_attention_xla(qd, kc, vc, pos, window=0)
+        err_a = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                      - want.astype(jnp.float32))))
+        report.row("gemm", "attn flash-decode b2 skv512 interpret",
+                   kernel=pl_fd.kernel, max_abs_err=f"{err_a:.3e}",
+                   ok=pl_fd.kernel == "flash_decode" and err_a < 1e-1)
+    finally:
+        if prev_mode is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = prev_mode
+    attn_section = {
+        "model_vs_measured": attn_rows,
+        "plan_cache": attn_cache._asdict(),
+        "interpret_flash_decode_max_abs_err": err_a,
+    }
+    ops.attn_plan_cache_clear()
+
     payload = {"rows": report.rows, "swiglu_fused_hbm": ratios,
+               "attn": attn_section,
                "grouped": grouped_section,
                "autotune": autotune_section,
                "calibration": calibration_section,

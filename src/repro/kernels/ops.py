@@ -1,18 +1,17 @@
-"""Legacy kernel entrypoints + the attention dispatch layer.
+"""Legacy kernel entrypoints — every family now has a planned API.
 
 The GEMM family moved to the declarative planned API in
 :mod:`repro.kernels.api` (``GemmSpec`` -> ``plan`` -> ``execute``,
 re-exported as :mod:`repro.ops`): one spec describes operands /
 quantization / epilogue / gating, one cached plan resolves the DSE tile
-and modeled costs, one generic custom VJP executes it.  The four
-pre-redesign entrypoints below (``gemm``, ``gemm_fused``, ``gemm_gated``,
-``gemm_int8``) remain as thin deprecated shims that build the equivalent
-spec and delegate — bit-identical results, plus a ``DeprecationWarning``
-so stragglers surface under ``-W error::DeprecationWarning``.
+and modeled costs, one generic custom VJP executes it.  Attention
+followed the same redesign into :mod:`repro.kernels.attn_api`
+(``AttnSpec`` -> ``attn_plan`` -> ``attn_execute``), so the ad-hoc
+if/else dispatch that used to live here is gone.
 
-Attention stays here (it is not part of the GEMM plan space): Pallas
-flash kernels on TPU, blocked/reference XLA paths elsewhere, same
-``REPRO_KERNELS`` mode contract as the GEMM layer.
+Everything below is a thin deprecated shim that delegates to the
+planned path — bit-identical results, plus a ``DeprecationWarning`` so
+stragglers surface under ``-W error::DeprecationWarning``.
 """
 
 from __future__ import annotations
@@ -23,17 +22,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import api
+from repro.kernels import attn_api
 from repro.kernels import ref as _ref
 from repro.kernels.api import _interpret, _mode, use_pallas  # noqa: F401
-from repro.kernels.blocked_attention import attention_blocked
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_decode import flash_decode, flash_decode_paged
+from repro.kernels.attn_api import (  # noqa: F401  (back-compat aliases)
+    BLOCKED_ATTN_THRESHOLD,
+    _decode_attention_paged_xla,
+    _decode_attention_xla,
+)
 
 
 def _warn(name: str) -> None:
     warnings.warn(
         f"repro.kernels.ops.{name} is deprecated; use repro.ops "
-        "(GemmSpec / plan / execute, or the one-shot repro.ops.gemm)",
+        "(the planned Spec / plan / execute APIs or their one-shots)",
         DeprecationWarning, stacklevel=3)
 
 
@@ -75,107 +77,28 @@ quantize_int8 = _ref.quantize_int8
 dequantize = _ref.dequantize
 
 
-# Above this many query/kv positions the unblocked reference would
-# materialize (b, h, sq, skv) scores; switch to the blocked XLA path.
-BLOCKED_ATTN_THRESHOLD = 1024
-
-
 def attention(q, k, v, *, causal: bool = True, window: int = 0,
               scale=None, q_offset=None) -> jax.Array:
-    """Multi-head attention with GQA + optional sliding window.
-
-    Dispatch: Pallas flash kernel on TPU for prefill/train-sized queries;
-    blocked lax implementation (same tiling, XLA-lowerable — what the
-    dry-run compiles) for long sequences elsewhere; plain reference for
-    short ones.  Single-token decode stays on the fused XLA path in the
-    model layer.
-    """
-    sq, skv = q.shape[1], k.shape[1]
-    if use_pallas() and sq >= 128:
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               scale=scale, q_offset=q_offset,
-                               interpret=_interpret())
-    if max(sq, skv) > BLOCKED_ATTN_THRESHOLD:
-        return attention_blocked(q, k, v, causal=causal, window=window,
-                                 scale=scale, q_offset=q_offset)
-    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+    """Deprecated shim: prefill attention through the planned AttnSpec
+    API (same dispatch, now recorded on the plan)."""
+    _warn("attention")
+    return attn_api.attention(q, k, v, causal=causal, window=window,
                               scale=scale, q_offset=q_offset)
 
 
-def _decode_attention_xla(q, k_cache, v_cache, pos, *, window):
-    """Head-grouped einsums with operands at storage dtype + fp32
-    accumulation — casting the cache itself to f32 would materialize and
-    rewrite a full-precision copy of the entire stacked cache every
-    layer (measured 1.38 TB/step on deepseek decode_32k).
-
-    ``pos``: (b,) per-slot positions (scalar broadcasts) — row i masks
-    cache slots > pos[i], the continuous-batching contract."""
-    b, hq, d = q.shape
-    _, skv, hkv, _ = k_cache.shape
-    groups = hq // hkv
-    qg = q.reshape(b, hkv, groups, d)
-    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
-                        preferred_element_type=jnp.float32) * d ** -0.5
-    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    k_pos = jnp.arange(skv)
-    mask = k_pos[None, :] <= posv[:, None]
-    if window > 0:
-        mask &= k_pos[None, :] > posv[:, None] - window
-    logits = jnp.where(mask[:, None, None, :], logits,
-                       _ref.NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhgk,bkhd->bhgd", probs.astype(v_cache.dtype),
-                     v_cache, preferred_element_type=jnp.float32)
-    return out.reshape(b, hq, d).astype(q.dtype)
-
-
-def decode_attention(q: jax.Array, k_cache: jax.Array,
-                     v_cache: jax.Array, pos: jax.Array, *,
+def decode_attention(q, k_cache, v_cache, pos, *,
                      window: int = 0) -> jax.Array:
-    """Single-token attention over a KV cache (serve_step hot-spot).
-
-    Pallas flash-decoding on TPU (k/v streamed through VMEM once at
-    storage dtype, online softmax in scratch); head-grouped einsum with
-    fp32 accumulation elsewhere.  q: (b, hq, d) -> (b, hq, d);
-    ``pos``: (b,) per-slot positions (a scalar broadcasts).
-    """
-    if use_pallas():
-        return flash_decode(q, k_cache, v_cache, pos, window=window,
-                            interpret=_interpret())
-    return _decode_attention_xla(q, k_cache, v_cache, pos,
-                                 window=window)
+    """Deprecated shim: dense-cache decode attention through the
+    planned AttnSpec API."""
+    _warn("decode_attention")
+    return attn_api.decode_attention(q, k_cache, v_cache, pos,
+                                     window=window)
 
 
-def _decode_attention_paged_xla(q, k_pages, v_pages, page_table, pos, *,
-                                window):
-    """Reference paged decode: gather each row's pages back into a
-    dense (b, max_pages * page_size, hkv, d) view and reuse the dense
-    path.  Because the engine sizes tables so the gathered length
-    equals the dense ``max_len``, the reductions see identical operand
-    lengths and the result is bit-identical to the dense cache layout —
-    the property the serve acceptance tests pin."""
-    n_pages, ps, hkv, d = k_pages.shape
-    b, max_pages = page_table.shape
-    k = k_pages[page_table].reshape(b, max_pages * ps, hkv, d)
-    v = v_pages[page_table].reshape(b, max_pages * ps, hkv, d)
-    return _decode_attention_xla(q, k, v, pos, window=window)
-
-
-def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
-                           v_pages: jax.Array, page_table: jax.Array,
-                           pos: jax.Array, *,
+def decode_attention_paged(q, k_pages, v_pages, page_table, pos, *,
                            window: int = 0) -> jax.Array:
-    """Single-token attention over a block-paged KV pool.
-
-    k_pages/v_pages: (n_pages, page_size, hkv, d) shared pool;
-    page_table: (b, max_pages) int32 per-slot tables (entries past a
-    row's live length point at the sink page and are masked by ``pos``).
-    Pallas paged flash-decoding on TPU (the table rides prefetched
-    scalar memory and steers the kv BlockSpec index_map); gather + the
-    dense XLA einsum path elsewhere.
-    """
-    if use_pallas():
-        return flash_decode_paged(q, k_pages, v_pages, page_table, pos,
-                                  window=window, interpret=_interpret())
-    return _decode_attention_paged_xla(q, k_pages, v_pages, page_table,
-                                       pos, window=window)
+    """Deprecated shim: paged-pool decode attention through the planned
+    AttnSpec API."""
+    _warn("decode_attention_paged")
+    return attn_api.decode_attention_paged(q, k_pages, v_pages,
+                                           page_table, pos, window=window)

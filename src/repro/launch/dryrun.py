@@ -164,14 +164,19 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str,
     # record (kernel, tile, modeled bytes, fallback reasons).
     from repro import ops as rops
     rec["gemm_plan_cache"] = rops.plan_cache_info()._asdict()
+    rec["attn_plan_cache"] = rops.attn_plan_cache_info()._asdict()
     if autotune:
         from repro import tune
         rec["tuning_cache"] = tune.tuning_cache_info()._asdict()
         rec["gemm_sources"] = {
             s: sum(1 for p in rops.plans() if p.source == s)
             for s in ("tuned", "analytic")}
+        rec["attn_sources"] = {
+            s: sum(1 for p in rops.attn_plans() if p.source == s)
+            for s in ("tuned", "analytic")}
     if explain:
         rec["gemm_plans"] = [p.explain() for p in rops.plans()]
+        rec["attn_plans"] = [p.explain() for p in rops.attn_plans()]
     if measure:
         # the measured half: every GEMM the cell planned is executed
         # standalone (jitted, synced) and joined with its modeled
@@ -311,6 +316,11 @@ def main() -> None:
               f"(cache {rec['gemm_plan_cache']}):")
         for text in rec["gemm_plans"]:
             print(text)
+    if args.explain and rec.get("attn_plans"):
+        print(f"[dryrun] {len(rec['attn_plans'])} planned attentions "
+              f"(cache {rec['attn_plan_cache']}):")
+        for text in rec["attn_plans"]:
+            print(text)
     if args.measure and rec.get("model_vs_measured"):
         from repro.telemetry import report as treport
         print("[dryrun] model-vs-measured (per planned GEMM):")
@@ -318,7 +328,9 @@ def main() -> None:
     if args.autotune and rec.get("tuning_cache"):
         from repro import tune
         print(f"[dryrun] tuning cache {tune.cache_path()}: "
-              f"{rec['tuning_cache']} sources {rec.get('gemm_sources')}")
+              f"{rec['tuning_cache']} gemm sources "
+              f"{rec.get('gemm_sources')} attn sources "
+              f"{rec.get('attn_sources')}")
     if args.calibrate:
         from repro import tune
         fits = tune.calibrate.fit()
@@ -330,7 +342,7 @@ def main() -> None:
         paths = telemetry.export(args.telemetry)
         print(f"[dryrun] telemetry: wrote {paths[0]} and {paths[1]}")
     print(json.dumps({k: v for k, v in rec.items()
-                      if k not in ("error", "gemm_plans",
+                      if k not in ("error", "gemm_plans", "attn_plans",
                                    "model_vs_measured")}, indent=1))
     if not rec["ok"]:
         print(rec.get("error", ""), file=sys.stderr)

@@ -125,7 +125,11 @@ def gelu_mlp(params: dict, x: jax.Array,
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class AttnSpec:
+class AttnLayerSpec:
+    """Layer *configuration* (weights + head geometry) — distinct from
+    ``ops.AttnSpec``, which describes one attention *operation* to the
+    kernel planner."""
+
     d_model: int
     n_heads: int
     n_kv_heads: int
@@ -136,7 +140,7 @@ class AttnSpec:
     use_rope: bool = True
 
 
-def init_attention(key, spec: AttnSpec, dtype) -> dict:
+def init_attention(key, spec: AttnLayerSpec, dtype) -> dict:
     k1, k2, k3, k4 = _split(key, 4)
     d, hd = spec.d_model, spec.head_dim
     return {
@@ -147,7 +151,7 @@ def init_attention(key, spec: AttnSpec, dtype) -> dict:
     }
 
 
-def _project_qkv(params, x, spec: AttnSpec, positions):
+def _project_qkv(params, x, spec: AttnLayerSpec, positions):
     b, s, _ = x.shape
     q = ops.gemm(x, params["wq"]).reshape(b, s, spec.n_heads, spec.head_dim)
     k = ops.gemm(x, params["wk"]).reshape(b, s, spec.n_kv_heads,
@@ -160,7 +164,7 @@ def _project_qkv(params, x, spec: AttnSpec, positions):
     return q, k, v
 
 
-def project_kv(params: dict, memory: jax.Array, spec: AttnSpec
+def project_kv(params: dict, memory: jax.Array, spec: AttnLayerSpec
                ) -> Tuple[jax.Array, jax.Array]:
     """Project cross-attention k/v heads from raw encoder memory."""
     b, f, _ = memory.shape
@@ -171,7 +175,7 @@ def project_kv(params: dict, memory: jax.Array, spec: AttnSpec
     return k, v
 
 
-def attention_block(params: dict, x: jax.Array, spec: AttnSpec,
+def attention_block(params: dict, x: jax.Array, spec: AttnLayerSpec,
                     positions: Optional[jax.Array] = None,
                     kv: Optional[Tuple[jax.Array, jax.Array]] = None,
                     memory: Optional[jax.Array] = None,
@@ -206,7 +210,7 @@ def attention_block(params: dict, x: jax.Array, spec: AttnSpec,
                     residual=residual)
 
 
-def init_kv_cache(batch: int, max_len: int, spec: AttnSpec, dtype) -> dict:
+def init_kv_cache(batch: int, max_len: int, spec: AttnLayerSpec, dtype) -> dict:
     shape = (batch, max_len, spec.n_kv_heads, spec.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
@@ -223,7 +227,7 @@ def scatter_rows(cache: jax.Array, new: jax.Array, idx: jax.Array
 
 
 def attention_decode(params: dict, x: jax.Array, cache: dict,
-                     pos: jax.Array, spec: AttnSpec,
+                     pos: jax.Array, spec: AttnLayerSpec,
                      residual: Optional[jax.Array] = None
                      ) -> Tuple[jax.Array, dict]:
     """Single-step decode: insert each row's k/v at its own position
@@ -257,7 +261,7 @@ def attention_decode(params: dict, x: jax.Array, cache: dict,
 
 def paged_attention_decode(params: dict, x: jax.Array, cache: dict,
                            page_table: jax.Array, pos: jax.Array,
-                           spec: AttnSpec,
+                           spec: AttnLayerSpec,
                            residual: Optional[jax.Array] = None
                            ) -> Tuple[jax.Array, dict]:
     """Single-step decode against a block-paged KV pool.

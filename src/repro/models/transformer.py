@@ -65,9 +65,9 @@ def _maybe_abs_pos(cfg: ModelConfig, x: jax.Array, start: jax.Array | int
 
 
 def _attn_spec(cfg: ModelConfig, kind: str, *, causal: bool = True
-               ) -> L.AttnSpec:
+               ) -> L.AttnLayerSpec:
     window = cfg.window if kind in ("attn", "moe") else cfg.local_window
-    return L.AttnSpec(
+    return L.AttnLayerSpec(
         d_model=cfg.d_model, n_heads=cfg.n_heads,
         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, window=window,
         rope_theta=cfg.rope_theta, causal=causal, use_rope=cfg.use_rope)
@@ -383,7 +383,7 @@ def decode_layer(p: dict, cache: dict, cfg: ModelConfig, kind: str,
     return x, cache
 
 
-def _decode_ring(p, cache, spec: L.AttnSpec, x, pos, wpos,
+def _decode_ring(p, cache, spec: L.AttnLayerSpec, x, pos, wpos,
                  residual=None):
     """Windowed decode against a ring-buffer cache of size <= window:
     every resident entry is in-window by construction, so attention masks

@@ -17,10 +17,18 @@ The grouped ragged family member (the MoE expert sweep) is
 ``ops.gemm_grouped(xs, bank, group_sizes)`` — same spec/plan/execute
 pipeline with the extended ``gemm_grouped_shapes`` plan key.
 
-Attention and the quantization helpers ride along so model code needs a
-single ``from repro import ops``.  The pre-redesign entrypoints
-(``gemm_fused``/``gemm_gated``/``gemm_int8`` and the old ``gemm``) live
-on as deprecated shims in :mod:`repro.kernels.ops`.
+Attention is the same framework applied to the second hot-spot
+(:mod:`repro.kernels.attn_api`):
+
+    spec = ops.AttnSpec(mode="decode", group=6)
+    pl   = ops.attn_plan(spec, (b, skv, hq, hkv, d))
+    o    = ops.attn_execute(pl, q, k_cache, v_cache, pos=pos)
+
+with the one-shots ``ops.attention`` / ``ops.decode_attention`` /
+``ops.decode_attention_paged`` building the spec from live operands.
+The pre-redesign entrypoints (``gemm_fused``/``gemm_gated``/
+``gemm_int8``, the old ``gemm``, and the same-named attention trio)
+live on as deprecated shims in :mod:`repro.kernels.ops`.
 """
 
 from repro.kernels.api import (  # noqa: F401
@@ -40,13 +48,22 @@ from repro.kernels.api import (  # noqa: F401
     solve_topk,
     use_pallas,
 )
-from repro.kernels.epilogue import ACTIVATIONS, Epilogue  # noqa: F401
-from repro.kernels.ops import (  # noqa: F401
+from repro.kernels.attn_api import (  # noqa: F401
     BLOCKED_ATTN_THRESHOLD,
+    AttnPlan,
+    AttnPlanCacheInfo,
+    AttnProblem,
+    AttnSpec,
     attention,
+    attn_execute,
+    attn_plan,
+    attn_plan_cache_clear,
+    attn_plan_cache_info,
+    attn_plans,
+    attn_solve_topk,
     decode_attention,
     decode_attention_paged,
-    dequantize,
-    quantize_int8,
 )
+from repro.kernels.epilogue import ACTIVATIONS, Epilogue  # noqa: F401
+from repro.kernels.ops import dequantize, quantize_int8  # noqa: F401
 from repro.core.tiling import TileConfig  # noqa: F401

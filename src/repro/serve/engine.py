@@ -597,7 +597,9 @@ class DecodeEngine:
                                     st.admitted_abs, st.first_abs,
                                     **common)
             telemetry.complete_span("serve.request.decode", st.first_abs,
-                                    fin_abs, tokens=len(toks), **common)
+                                    fin_abs, tokens=len(toks),
+                                    attn_plan=self._attn_plan_key(),
+                                    **common)
             telemetry.event("serve.request.finished", rid=req.rid,
                             n_tokens=len(toks), ttft=ttft,
                             queue_wait=st.queue_wait,
@@ -701,7 +703,8 @@ class DecodeEngine:
                     + [self._state[s].remaining for s in active])
             burst: List[jax.Array] = []
             with telemetry.span("serve.decode_burst", steps=max(k, 1),
-                                active=len(active)):
+                                active=len(active),
+                                attn_plan=self._attn_plan_key()):
                 t_burst0 = time.perf_counter()
                 for _ in range(max(k, 1)):
                     logits, self._cache = self._step(
@@ -785,6 +788,17 @@ class DecodeEngine:
             elif kind == "local":
                 out.append((cfg.local_window, 1))
         return out
+
+    def _attn_plan_key(self) -> Optional[str]:
+        """The decode-mode attention plan this engine's steps resolve to
+        (``spec key @ shape -> kernel``) — attached to decode-burst and
+        per-request decode spans so Perfetto traces attribute the time
+        to a specific plan.  ``None`` until the first decode traces."""
+        from repro import ops as rops
+        for pl in reversed(rops.attn_plans()):
+            if pl.spec.mode in ("decode", "decode_paged"):
+                return f"{pl.spec.key}@{pl.shape_key}->{pl.kernel}"
+        return None
 
     def modeled_kv_bytes_per_step(self, positions) -> int:
         """Modeled KV-cache HBM bytes one batched decode step streams,

@@ -24,6 +24,7 @@ Enable per spec (``GemmSpec(tune=True)``), per process
 from repro.tune import calibrate  # noqa: F401
 from repro.tune.autotune import (  # noqa: F401
     DEFAULT_K,
+    attn_lookup_or_search,
     disable,
     enable,
     is_enabled,
@@ -34,6 +35,7 @@ from repro.tune.cache import (  # noqa: F401
     SCHEMA_VERSION as CACHE_SCHEMA_VERSION,
     TuningCache,
     TuningCacheInfo,
+    attn_cache_key,
     cache_key,
     cache_path,
     tuning_cache,
@@ -45,6 +47,8 @@ from repro.tune.measure import (  # noqa: F401
     DEFAULT_MAX_FLOPS,
     DEFAULT_WARMUP,
     Measurement,
+    measure_attn_plan,
     measure_plan,
+    synthesize_attn_operands,
     synthesize_operands,
 )

@@ -31,7 +31,7 @@ import numpy as np
 from repro import telemetry
 from repro.core.tiling import TileConfig
 from repro.tune import measure
-from repro.tune.cache import cache_key, tuning_cache
+from repro.tune.cache import attn_cache_key, cache_key, tuning_cache
 
 #: candidates swept per search when nothing narrower is configured
 DEFAULT_K = 4
@@ -185,4 +185,134 @@ def lookup_or_search(spec, shapes: Tuple[int, int, int], problem, *,
         t_measured_us=entry["t_us"], spread=entry["spread"],
         t_analytic_us=analytic.get("t_us"),
         analytic_tile=str(analytic.get("tile", "")),
+        k_searched=len(candidates), from_cache=False)
+
+
+# ---------------------------------------------------------------------------
+# Attention block search — same cache-then-sweep loop over AttnPlan
+# block candidates, with one extra degree of freedom: a batch proxy.
+# ---------------------------------------------------------------------------
+
+def _blocks_dict(bq, bkv) -> dict:
+    return {"bq": bq, "bkv": bkv}
+
+
+def _blocks_str(bq, bkv) -> str:
+    return f"bq={bq or '-'} bkv={bkv or '-'}"
+
+
+def _attn_proxy_shapes(spec, shapes, problem, max_flops: float):
+    """(proxy shapes, measured_b) — attention blocks are batch-invariant
+    (``b`` only multiplies grid axis 0), so an over-budget problem is
+    measured at the largest batch whose flops fit instead of being
+    skipped outright.  Returns ``None`` when even b=1 blows the budget."""
+    if problem.flops <= max_flops:
+        return tuple(int(x) for x in shapes), int(shapes[0])
+    per_b = problem.flops / max(1, problem.b)
+    b_proxy = int(max_flops // per_b)
+    if b_proxy < 1:
+        return None
+    return (b_proxy,) + tuple(int(x) for x in shapes[1:]), b_proxy
+
+
+def attn_lookup_or_search(spec, shapes, problem, *,
+                          k: Optional[int] = None,
+                          iters: int = measure.DEFAULT_ITERS,
+                          warmup: int = measure.DEFAULT_WARMUP,
+                          max_flops: float = measure.DEFAULT_MAX_FLOPS,
+                          seed: int = 0):
+    """Measured attention block winner for (spec, shapes) —
+    ``((bq, bkv), TunedInfo)`` from the persistent ``attn|...`` cache
+    namespace or a fresh top-K sweep, or ``None`` when the analytic path
+    should decide.  Same degradation policy as the GEMM search: never
+    raises into ``attn_plan()``."""
+    import dataclasses as _dc
+
+    from repro.kernels import api
+    from repro.kernels import attn_api
+    mode = api._mode()
+    cache = tuning_cache()
+    key = attn_cache_key(spec, shapes, mode)
+    ent = cache.get(key)
+    if ent is not None:
+        blocks = ent.get("blocks")
+        if isinstance(blocks, dict):
+            bq = blocks.get("bq")
+            bkv = blocks.get("bkv")
+            analytic = ent.get("analytic") or {}
+            telemetry.counter("attn.autotune.cache_hits").add(1)
+            return (bq, bkv), api.TunedInfo(
+                t_measured_us=float(ent.get("t_us", 0.0)),
+                spread=float(ent.get("spread", 0.0)),
+                t_analytic_us=analytic.get("t_us"),
+                analytic_tile=str(analytic.get("blocks", "")),
+                k_searched=int(ent.get("k_searched", 0)),
+                from_cache=True)
+    proxy = _attn_proxy_shapes(spec, shapes, problem, max_flops)
+    if proxy is None:
+        telemetry.counter("attn.autotune.flops_skips").add(1)
+        return None                 # even b=1 is too big for this host
+    proxy_shapes, measured_b = proxy
+
+    k = k or search_k()
+    designs = attn_api.attn_solve_topk(spec, shapes, k)
+    rng = np.random.default_rng(seed)
+    candidates = []                 # (median_s, rank, plan, Measurement)
+    for rank, d in enumerate(designs):
+        cand = _dc.replace(spec, bq=d.bq, bkv=d.bkv, tune=False)
+        try:
+            pl = attn_api._resolve(cand, proxy_shapes)
+            meas = measure.measure_attn_plan(pl, iters=iters,
+                                             warmup=warmup, rng=rng)
+        except Exception as e:      # infeasible post-clamp / exec error
+            telemetry.event("attn.autotune.candidate_error",
+                            spec=spec.key,
+                            blocks=_blocks_str(d.bq, d.bkv),
+                            error=repr(e))
+            continue
+        candidates.append((meas.median_s, rank, pl, meas))
+    if not candidates:
+        return None
+    candidates.sort(key=lambda c: (c[0], c[1]))     # ties: analytic rank
+    _, win_rank, win_pl, win_meas = candidates[0]
+    analytic_first = next((c for c in candidates if c[1] == 0), None)
+    shape_str = "x".join(str(int(x)) for x in shapes)
+    entry = {
+        "blocks": _blocks_dict(win_pl.bq, win_pl.bkv),
+        "t_us": win_meas.median_s * 1e6,
+        "spread": win_meas.spread,
+        "t_model_us": win_pl.traffic.t_model * 1e6,
+        "hbm_bytes": win_pl.hbm_bytes,
+        "flops": win_pl.flops,
+        "analytic": {
+            "blocks": _blocks_str(analytic_first[2].bq,
+                                  analytic_first[2].bkv),
+            "t_us": analytic_first[0] * 1e6,
+        } if analytic_first is not None else None,
+        "k_searched": len(candidates),
+        "iters": iters, "warmup": warmup,
+        "measured_b": measured_b,
+        "mode": mode, "spec": spec.key, "shape": shape_str,
+        "samples": [
+            {"blocks": _blocks_dict(pl.bq, pl.bkv), "rank": rank,
+             "t_us": med * 1e6, "spread": meas.spread,
+             "t_model_us": pl.traffic.t_model * 1e6,
+             "hbm_bytes": pl.hbm_bytes, "flops": pl.flops}
+            for med, rank, pl, meas in sorted(candidates,
+                                              key=lambda c: c[1])
+        ],
+    }
+    cache.put(key, entry)
+    telemetry.counter("attn.autotune.searches").add(1)
+    telemetry.event(
+        "attn.autotune", spec=spec.key, shape=shape_str, mode=mode,
+        k_searched=len(candidates), measured_b=measured_b,
+        winner=_blocks_str(win_pl.bq, win_pl.bkv), winner_rank=win_rank,
+        t_us=entry["t_us"], spread=entry["spread"],
+        analytic=entry["analytic"])
+    analytic = entry["analytic"] or {}
+    return (win_pl.bq, win_pl.bkv), api.TunedInfo(
+        t_measured_us=entry["t_us"], spread=entry["spread"],
+        t_analytic_us=analytic.get("t_us"),
+        analytic_tile=str(analytic.get("blocks", "")),
         k_searched=len(candidates), from_cache=False)

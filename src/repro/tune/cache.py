@@ -50,6 +50,15 @@ def cache_key(spec, shapes, mode: str) -> str:
     return f"{spec.key}|{m}x{k}x{n}|{mode}"
 
 
+def attn_cache_key(spec, shapes, mode: str) -> str:
+    """Attention join key — ``AttnSpec.key`` already starts with
+    ``attn|``, so attention winners live in their own namespace next to
+    the GEMM entries in the same file (shape tuples are per-mode, see
+    :func:`repro.kernels.attn_api._shape_fields`)."""
+    dims = "x".join(str(int(x)) for x in shapes)
+    return f"{spec.key}|{dims}|{mode}"
+
+
 class TuningCacheInfo(NamedTuple):
     entries: int
     hits: int

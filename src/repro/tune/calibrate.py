@@ -144,7 +144,7 @@ def apply(fits: Optional[Dict[str, CalibrationFit]] = None,
     (``bandwidth.set_calibration``), invalidating the DSE and plan
     caches so every later ``plan()`` re-ranks under measured rates.
     Returns the fit applied, or ``None`` when nothing usable exists."""
-    from repro.kernels import api
+    from repro.kernels import api, attn_api
     if fits is None:
         fits = fit()
     mode = mode or api._mode()
@@ -156,11 +156,13 @@ def apply(fits: Optional[Dict[str, CalibrationFit]] = None,
         peak_int8_ops=c.peak_flops,     # one compute constant per mode
         source=f"tune.calibrate[{mode}, n={c.n_samples}, r2={c.r2}]"))
     api.plan_cache_clear()
+    attn_api.attn_plan_cache_clear()    # attention prices via the same rates
     return c
 
 
 def clear() -> None:
     """Back to datasheet constants (and fresh DSE/plan caches)."""
-    from repro.kernels import api
+    from repro.kernels import api, attn_api
     bandwidth.clear_calibration()
     api.plan_cache_clear()
+    attn_api.attn_plan_cache_clear()

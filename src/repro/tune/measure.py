@@ -168,3 +168,67 @@ def measure_plan(pl, *, iters: int = DEFAULT_ITERS,
     return Measurement(times_s=tuple(times),
                        kept_s=reject_outliers(tuple(times)),
                        warmup=max(1, warmup))
+
+
+def synthesize_attn_operands(pl, rng: np.random.Generator) -> dict:
+    """attn_execute() operands matching an :class:`AttnPlan` — dense
+    q/k/v at spec dtypes for prefill, a full cache (worst-case ``pos``,
+    what the plan bills) for decode, and a pool where each slot owns its
+    own pages for paged decode."""
+    import jax.numpy as jnp
+    spec = pl.spec
+    if spec.mode == "prefill":
+        return {
+            "q": _rand(rng, (pl.b, pl.sq, pl.hq, pl.d), spec.q_dtype),
+            "k": _rand(rng, (pl.b, pl.skv, pl.hkv, pl.d), spec.kv_dtype),
+            "v": _rand(rng, (pl.b, pl.skv, pl.hkv, pl.d), spec.kv_dtype),
+            "pos": None, "page_table": None,
+        }
+    q = _rand(rng, (pl.b, pl.hq, pl.d), spec.q_dtype)
+    pos = jnp.full((pl.b,), pl.skv - 1, jnp.int32)
+    if spec.mode == "decode":
+        kv = (pl.b, pl.skv, pl.hkv, pl.d)
+        return {"q": q, "k": _rand(rng, kv, spec.kv_dtype),
+                "v": _rand(rng, kv, spec.kv_dtype),
+                "pos": pos, "page_table": None}
+    pool = (pl.b * pl.max_pages, pl.page_size, pl.hkv, pl.d)
+    table = jnp.arange(pl.b * pl.max_pages, dtype=jnp.int32
+                       ).reshape(pl.b, pl.max_pages)
+    return {"q": q, "k": _rand(rng, pool, spec.kv_dtype),
+            "v": _rand(rng, pool, spec.kv_dtype),
+            "pos": pos, "page_table": table}
+
+
+def measure_attn_plan(pl, *, iters: int = DEFAULT_ITERS,
+                      warmup: int = DEFAULT_WARMUP,
+                      rng: Optional[np.random.Generator] = None,
+                      timer: Callable[[], float] = time.perf_counter
+                      ) -> Measurement:
+    """The :func:`measure_plan` harness for attention plans — same jit /
+    warm-up / device-sync / robust-median contract."""
+    import jax
+    from repro.kernels import attn_api
+    rng = rng or np.random.default_rng(0)
+    ops = synthesize_attn_operands(pl, rng)
+
+    def f(q, k, v, pos, page_table):
+        return attn_api.attn_execute(pl, q, k, v, pos=pos,
+                                     page_table=page_table)
+
+    jitted = jax.jit(f)
+    args = (ops["q"], ops["k"], ops["v"], ops["pos"], ops["page_table"])
+    for _ in range(max(1, warmup)):          # compile + warm-up
+        jax.block_until_ready(jitted(*args))
+    times = []
+    with telemetry.span("measure.attn", spec=pl.spec.key,
+                        shape=pl.shape_key, kernel=pl.kernel,
+                        iters=iters, warmup=warmup) as sp:
+        for _ in range(max(1, iters)):
+            t0 = timer()
+            out = jitted(*args)
+            jax.block_until_ready(out)
+            times.append(timer() - t0)
+        sp.sync(out)
+    return Measurement(times_s=tuple(times),
+                       kept_s=reject_outliers(tuple(times)),
+                       warmup=max(1, warmup))

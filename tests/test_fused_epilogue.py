@@ -280,7 +280,7 @@ def test_swiglu_residual_fusion_matches_old_composition():
 
 def test_attention_block_residual_fusion():
     from repro.models import layers as L
-    spec = L.AttnSpec(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16)
+    spec = L.AttnLayerSpec(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16)
     params = L.init_attention(jax.random.PRNGKey(0), spec, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 64), jnp.float32)
     got = L.attention_block(params, x, spec, residual=x)

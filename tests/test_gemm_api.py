@@ -305,13 +305,13 @@ def test_internal_model_layers_use_no_deprecated_entrypoints():
     key = jax.random.PRNGKey(0)
     params = L.init_swiglu(key, 64, 128, jnp.float32)
     attn = L.init_attention(
-        key, L.AttnSpec(64, 4, 2, 16, rope_theta=1e4), jnp.float32)
+        key, L.AttnLayerSpec(64, 4, 2, 16, rope_theta=1e4), jnp.float32)
     x = _rand((2, 8, 64), jnp.float32)
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
         def loss(p, a, x):
             h = L.swiglu(p, x, residual=x)
-            h = L.attention_block(a, h, L.AttnSpec(64, 4, 2, 16),
+            h = L.attention_block(a, h, L.AttnLayerSpec(64, 4, 2, 16),
                                   residual=h)
             return jnp.sum(h.astype(jnp.float32))
         val, grads = jax.value_and_grad(loss)(params, attn, x)
